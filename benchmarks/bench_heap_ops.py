@@ -1,0 +1,45 @@
+"""Paper claim (§I, §III, §IV): SP1/SP2 perform FEWER heap operations
+than Dijkstra (unlike Crauser's in-version, which doubles them).
+
+One row per graph family: total heap ops (insert+adjust+removeMin) for
+Dijkstra / SP1 / SP2 / SP3, and the reduction ratio.
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.core import generators as gen
+from repro.core.graph import HostGraph
+from repro.core.sssp.reference import dijkstra, sp1, sp2, sp3
+
+FAMILIES = ("gnp", "dag", "unweighted", "grid", "power_law", "chain",
+            "geometric")
+
+
+def run(n: int = 2000, seeds=(0, 1, 2)) -> list[dict]:
+    rows = []
+    for fam in FAMILIES:
+        tot = {k: 0 for k in ("dijkstra", "sp1", "sp2", "sp3")}
+        us = {k: 0.0 for k in tot}
+        for seed in seeds:
+            nn, src, dst, w = gen.make(fam, n, seed=seed)
+            hg = HostGraph(nn, src, dst, w)
+            for name, algo in (("dijkstra", dijkstra), ("sp1", sp1),
+                               ("sp2", sp2), ("sp3", sp3)):
+                t0 = time.perf_counter()
+                r = algo(hg)
+                us[name] += (time.perf_counter() - t0) * 1e6
+                tot[name] += r.heap_ops
+        rows.append({
+            "family": fam,
+            **{f"heapops_{k}": v // len(seeds) for k, v in tot.items()},
+            "sp1_vs_dijkstra": round(tot["sp1"] / max(tot["dijkstra"], 1),
+                                     3),
+            "sp2_vs_dijkstra": round(tot["sp2"] / max(tot["dijkstra"], 1),
+                                     3),
+            "us_dijkstra": int(us["dijkstra"] / len(seeds)),
+            "us_sp2": int(us["sp2"] / len(seeds)),
+        })
+    return rows

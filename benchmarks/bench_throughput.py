@@ -1,0 +1,50 @@
+"""Wall-clock engine throughput on this host (CPU; indicative only —
+the TPU numbers come from the dry-run roofline): edges/sec for the JAX
+engine configs vs Bellman-Ford and delta-stepping, with graph-size
+scaling.
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.core import generators as gen
+from repro.core.graph import HostGraph
+from repro.core.sssp.bellman_ford import run_bellman_ford
+from repro.core.sssp.delta_stepping import run_delta_stepping
+from repro.core.sssp.engine import SP4_CONFIG, SP3_CONFIG, run_sssp
+
+
+def _time(fn, reps=3):
+    fn()  # compile
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        fn()
+    return (time.perf_counter() - t0) / reps
+
+
+def run(sizes=(2000, 8000, 32000)) -> list[dict]:
+    rows = []
+    for n in sizes:
+        nn, src, dst, w = gen.gnp(n, avg_deg=8, seed=0)
+        hg = HostGraph(nn, src, dst, w)
+        g = hg.to_device()
+        e = hg.e
+        algos = {
+            "sp4": lambda: run_sssp(g, 0, SP4_CONFIG),
+            "sp3_bsp": lambda: run_sssp(g, 0, SP3_CONFIG),
+            "bellman_ford": lambda: run_bellman_ford(g),
+            "delta_0.3": lambda: run_delta_stepping(g, delta=0.3),
+        }
+        row = {"n": n, "e": e}
+        for name, fn in algos.items():
+            dt = _time(fn)
+            row[f"ms_{name}"] = round(dt * 1e3, 2)
+            row[f"meps_{name}"] = round(e / dt / 1e6, 1)  # M edges/s
+        res = run_sssp(g, 0, SP4_CONFIG)
+        bf = run_bellman_ford(g)
+        row["rounds_sp4"] = res.rounds
+        row["rounds_bf"] = bf.rounds
+        rows.append(row)
+    return rows

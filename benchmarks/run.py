@@ -1,0 +1,66 @@
+"""Benchmark harness: one module per paper claim.
+
+  bench_heap_ops    — SP1/SP2 heap-op reduction vs Dijkstra (§III/§IV)
+  bench_rounds      — rounds-to-fixpoint collapse + per-rule ablation +
+                      Crauser in/out comparison (§V/§VI, Thm 4, Lem 9)
+  bench_optimality  — Thm 2 (DAG O(e)) and Thm 3 (unweighted BFS)
+  bench_throughput  — engine vs Bellman-Ford vs delta-stepping (CPU)
+  bench_kernels     — kernel microbench (jnp path)
+
+``python -m benchmarks.run [--quick]`` prints CSV blocks per bench.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+
+def emit(name: str, rows: list[dict]) -> None:
+    print(f"\n# === {name} ===")
+    if not rows:
+        print("(no rows)")
+        return
+    cols: list[str] = []
+    for r in rows:
+        for k in r:
+            if k not in cols:
+                cols.append(k)
+    print(",".join(cols))
+    for r in rows:
+        print(",".join(str(r.get(c, "")) for c in cols))
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--only", default=None)
+    args = ap.parse_args()
+
+    from benchmarks import (bench_heap_ops, bench_kernels,
+                            bench_optimality, bench_rounds,
+                            bench_throughput)
+
+    n = 600 if args.quick else 2000
+    sizes = (1000, 4000) if args.quick else (2000, 8000, 32000)
+    benches = {
+        "heap_ops": lambda: bench_heap_ops.run(n=n),
+        "rounds": lambda: bench_rounds.run(n=n),
+        "optimality": lambda: bench_optimality.run(
+            n=900 if args.quick else 3000),
+        "throughput": lambda: bench_throughput.run(sizes=sizes),
+        "kernels": bench_kernels.run,
+    }
+    t_all = time.time()
+    for name, fn in benches.items():
+        if args.only and args.only != name:
+            continue
+        t0 = time.time()
+        rows = fn()
+        emit(name, rows)
+        print(f"# ({name}: {time.time() - t0:.1f}s)")
+    print(f"\n# total {time.time() - t_all:.1f}s")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,66 @@
+"""Distributed SP4 on 8 (virtual) devices: edges sharded over a
+(data, model) mesh, vertex state replicated, pmin all-reduces per round
+— bitwise identical to the single-device engine.
+
+This launcher-style script sets its own device-count override (the
+library and tests never do).
+
+  python examples/sssp_distributed.py --n 20000
+"""
+import os
+
+os.environ.setdefault("XLA_FLAGS",
+                      "--xla_force_host_platform_device_count=8")
+import argparse
+import sys
+import time
+
+sys.path.insert(0, "src")
+
+import numpy as np
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--n", type=int, default=20000)
+    ap.add_argument("--deg", type=float, default=8.0)
+    args = ap.parse_args()
+
+    import jax
+    from jax.sharding import Mesh
+    from repro.core import generators as gen
+    from repro.core.graph import HostGraph
+    from repro.core.sssp.distributed import run_sssp_distributed
+    from repro.core.sssp.engine import SP4_CONFIG, run_sssp
+
+    print(f"devices: {len(jax.devices())}")
+    n, src, dst, w = gen.gnp(args.n, avg_deg=args.deg, seed=0)
+    hg = HostGraph(n, src, dst, w)
+    g = hg.to_device()
+    print(f"graph n={n} e={hg.e}")
+
+    mesh = Mesh(np.asarray(jax.devices()).reshape(2, 4),
+                ("data", "model"))
+    t0 = time.time()
+    D, C, fixed, rounds = run_sssp_distributed(
+        g, 0, SP4_CONFIG, mesh, axes=("data", "model"))
+    jax.block_until_ready(D)
+    t_dist = time.time() - t0
+
+    t0 = time.time()
+    single = run_sssp(g, 0, SP4_CONFIG)
+    jax.block_until_ready(single.dist)
+    t_single = time.time() - t0
+
+    assert np.array_equal(np.asarray(single.dist), np.asarray(D)), \
+        "distributed must be bitwise identical (min is associative)"
+    reach = int(np.isfinite(np.asarray(D)).sum())
+    print(f"rounds={int(rounds)}  reachable={reach}/{n}")
+    print(f"single-device {t_single*1e3:.0f} ms | "
+          f"8-device sharded {t_dist*1e3:.0f} ms "
+          f"(CPU collectives; TPU scaling comes from the dry-run)")
+    print("bitwise identical ✓")
+
+
+if __name__ == "__main__":
+    main()

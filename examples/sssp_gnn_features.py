@@ -1,0 +1,62 @@
+"""The paper's technique USED BY the GNN substrate: SP4 shortest-path
+distances from a few landmark vertices become positional features for a
+GAT node classifier (distance encodings, cf. position-aware GNNs).
+
+  python examples/sssp_gnn_features.py
+"""
+import sys
+
+sys.path.insert(0, "src")
+
+import numpy as np
+
+
+def main():
+    import jax
+    import jax.numpy as jnp
+    from repro.core.graph import HostGraph
+    from repro.core.sssp.engine import SP4_CONFIG, run_sssp
+    from repro.data.synthetic import cora_like
+    from repro.models.gnn import gat
+    from repro.models.gnn.layers import build_batch
+
+    n, src, dst, x, y = cora_like(n=600, e=2400, d=64, seed=0)
+    hg = HostGraph(n, src, dst, np.ones(len(src), np.float32))
+    g = hg.to_device()
+
+    # SP4 distances from 8 landmarks (one engine run each; each takes a
+    # handful of bulk-synchronous rounds — BFS via Theorem 3)
+    rng = np.random.default_rng(0)
+    landmarks = rng.choice(n, 8, replace=False)
+    feats = []
+    for lm in landmarks:
+        res = run_sssp(g, int(lm), SP4_CONFIG)
+        d = np.asarray(res.dist)
+        d = np.where(np.isinf(d), 20.0, d)  # unreachable -> large
+        feats.append(d / 10.0)
+        print(f"  landmark {lm}: engine rounds={res.rounds}")
+    dist_feats = np.stack(feats, axis=1).astype(np.float32)
+
+    def train(features, tag):
+        batch = build_batch(n, src, dst, features, y)
+        cfg = gat.GATConfig(in_dim=features.shape[1], n_classes=7)
+        params = gat.init_params(cfg, jax.random.PRNGKey(0))
+        step = jax.jit(jax.value_and_grad(
+            lambda p: gat.loss_fn(p, batch, cfg)[0]))
+        for i in range(120):
+            loss, grads = step(params)
+            params = jax.tree.map(lambda p, gg: p - 0.3 * gg, params,
+                                  grads)
+        _, met = gat.loss_fn(params, batch, cfg)
+        print(f"  {tag:28s} final acc = {float(met['acc']):.3f}")
+        return float(met["acc"])
+
+    print("\ntraining GAT:")
+    acc_base = train(x, "bag-of-words only")
+    acc_pos = train(np.concatenate([x, dist_feats], 1),
+                    "+ SP4 landmark distances")
+    print(f"\nSP4 positional features delta: {acc_pos - acc_base:+.3f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,77 @@
+"""Async checkpoint manager: keep-last-k, atomic writes, auto-resume.
+
+Writes go to `<dir>/tmp_step_N` on a background thread and are renamed
+to `<dir>/step_N` only when complete — a crash mid-write can never
+corrupt the restore path (restart-from-latest simply skips tmp dirs).
+"""
+from __future__ import annotations
+
+import os
+import re
+import shutil
+import threading
+
+from repro.checkpoint.store import load_pytree, save_pytree
+
+
+class CheckpointManager:
+    def __init__(self, directory: str, keep: int = 3):
+        self.dir = directory
+        self.keep = keep
+        os.makedirs(directory, exist_ok=True)
+        self._thread: threading.Thread | None = None
+
+    # ------------------------------------------------------------------
+    def save(self, step: int, tree, blocking: bool = False):
+        self.wait()  # one in-flight write at a time
+        # Snapshot to host SYNCHRONOUSLY: the training loop donates
+        # params/opt buffers, so device arrays may be deleted before a
+        # background thread touches them.  Only the file I/O is async.
+        import jax
+        tree = jax.device_get(tree)
+
+        def _write():
+            tmp = os.path.join(self.dir, f"tmp_step_{step}")
+            final = os.path.join(self.dir, f"step_{step}")
+            if os.path.exists(tmp):
+                shutil.rmtree(tmp)
+            save_pytree(tree, tmp)
+            if os.path.exists(final):
+                shutil.rmtree(final)
+            os.rename(tmp, final)
+            self._gc()
+
+        if blocking:
+            _write()
+        else:
+            self._thread = threading.Thread(target=_write, daemon=True)
+            self._thread.start()
+
+    def wait(self):
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+
+    # ------------------------------------------------------------------
+    def steps(self) -> list[int]:
+        out = []
+        for name in os.listdir(self.dir):
+            m = re.fullmatch(r"step_(\d+)", name)
+            if m:
+                out.append(int(m.group(1)))
+        return sorted(out)
+
+    def restore_latest(self, tree_like):
+        steps = self.steps()
+        if not steps:
+            return None, None
+        step = steps[-1]
+        tree = load_pytree(tree_like,
+                           os.path.join(self.dir, f"step_{step}"))
+        return step, tree
+
+    def _gc(self):
+        steps = self.steps()
+        for s in steps[: -self.keep]:
+            shutil.rmtree(os.path.join(self.dir, f"step_{s}"),
+                          ignore_errors=True)

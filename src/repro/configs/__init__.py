@@ -1,0 +1,50 @@
+"""Architecture registry: --arch <id> resolves here.
+
+Each arch module exposes
+  ARCH          — the ArchSpec (id, kind, full config, smoke config,
+                  applicable dry-run shape names, cell builder)
+get_arch(id) / list_archs() are what launch/dryrun.py and tests use.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+
+@dataclasses.dataclass(frozen=True)
+class ArchSpec:
+    name: str
+    kind: str                       # lm | gnn | recsys | sssp
+    full: object                    # full-size model config
+    smoke: object                   # reduced config for CPU smoke tests
+    shapes: tuple[str, ...]         # applicable dry-run cells
+    # build_cell(cfg, shape_name) -> Cell (see configs.cells)
+    build_cell: Callable
+    notes: str = ""
+
+
+_REGISTRY: dict[str, ArchSpec] = {}
+
+
+def register(spec: ArchSpec):
+    _REGISTRY[spec.name] = spec
+    return spec
+
+
+def get_arch(name: str) -> ArchSpec:
+    _ensure_loaded()
+    return _REGISTRY[name]
+
+
+def list_archs() -> list[str]:
+    _ensure_loaded()
+    return sorted(_REGISTRY)
+
+
+def _ensure_loaded():
+    if _REGISTRY:
+        return
+    from repro.configs import (  # noqa: F401
+        deepseek_moe_16b, llama4_maverick_400b_a17b, command_r_35b,
+        command_r_plus_104b, qwen3_32b, nequip, pna, gat_cora, dimenet,
+        xdeepfm, sssp_synth)

@@ -1,0 +1,223 @@
+"""Dry-run cell builders: (arch config x input shape) -> lowerable jit.
+
+A Cell bundles everything launch/dryrun.py needs:
+  lower(mesh) -> jax.stages.Lowered   for the production mesh
+plus metadata for the roofline (analytic model FLOPs, token counts).
+
+LM shapes (seq_len x global_batch):
+  train_4k    : train_step  (fwd+bwd+AdamW), tokens [256, 4096+1]
+  prefill_32k : jit forward, tokens [32, 32768]
+  decode_32k  : serve_step — ONE token, KV cache of 32768   [B=128]
+  long_500k   : serve_step — ONE token, cache 524288        [B=1]
+                (sub-quadratic archs only; full-attention archs skip)
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.distributed import sharding as shr
+from repro.distributed.mesh import data_axes
+from repro.models import transformer as tfm
+from repro.optim import adamw_init
+from repro.runtime.train_loop import TrainConfig, make_train_step
+
+
+@dataclasses.dataclass
+class Cell:
+    arch: str
+    shape: str
+    kind: str                      # train | prefill | decode
+    lower: Callable[[Mesh], Any]   # mesh -> jax.stages.Lowered
+    model_flops: float = 0.0       # analytic MODEL_FLOPS for the cell
+    tokens: int = 0
+    notes: str = ""
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def _ns(mesh, shape, *spec):
+    return NamedSharding(mesh, shr.safe_P(mesh, shape, P(*spec)))
+
+
+# ---------------------------------------------------------------------------
+# LM cells
+# ---------------------------------------------------------------------------
+
+LM_SHAPES = {
+    "train_4k": dict(seq=4096, batch=256, kind="train"),
+    "prefill_32k": dict(seq=32768, batch=32, kind="prefill"),
+    "decode_32k": dict(seq=32768, batch=128, kind="decode"),
+    "long_500k": dict(seq=524288, batch=1, kind="decode"),
+}
+
+
+def lm_cell(cfg: tfm.LMConfig, shape_name: str, arch: str) -> Cell:
+    info = LM_SHAPES[shape_name]
+    seq, batch, kind = info["seq"], info["batch"], info["kind"]
+    n_active = cfg.active_param_count()
+
+    if kind == "train":
+        # 6*N_active*D for fwd+bwd, + attention term 12*L*d_head*H*S^2*B/2
+        flops = 6.0 * n_active * batch * seq
+        tokens = batch * seq
+    elif kind == "prefill":
+        flops = 2.0 * n_active * batch * seq
+        tokens = batch * seq
+    else:
+        flops = 2.0 * n_active * batch
+        tokens = batch
+
+    def lower(mesh: Mesh):
+        dp = data_axes(mesh)
+        hooks = shr.lm_hooks(mesh, cfg)
+        params_abs = jax.eval_shape(
+            partial(tfm.init_params, cfg), jax.random.PRNGKey(0))
+        p_sh = shr.tree_shardings(params_abs, mesh, shr.lm_param_spec, cfg)
+
+        if kind == "train":
+            opt_abs = jax.eval_shape(adamw_init, params_abs)
+            o_sh = shr.opt_state_shardings(p_sh, mesh, params_abs)  # ZeRO-1
+            batch_abs = {"tokens": _sds((batch, seq + 1), jnp.int32)}
+            b_sh = {"tokens": _ns(mesh, (batch, seq + 1), dp, None)}
+            tcfg = TrainConfig(total_steps=10_000)
+            step = make_train_step(
+                lambda p, b: tfm.loss_fn(p, b, cfg, hooks), tcfg,
+                in_shardings=(p_sh, o_sh, b_sh), donate=False)
+            return step.lower(params_abs, opt_abs, batch_abs)
+
+        if kind == "prefill":
+            toks_abs = _sds((batch, seq), jnp.int32)
+            t_sh = _ns(mesh, (batch, seq), dp, None)
+
+            def fwd(params, tokens):
+                logits, _ = tfm.forward(params, tokens, cfg, hooks)
+                return logits[:, -1]  # next-token logits
+
+            return jax.jit(fwd, in_shardings=(p_sh, t_sh)).lower(
+                params_abs, toks_abs)
+
+        # decode: one serve step against a seq-long cache
+        cache_abs = jax.eval_shape(
+            partial(tfm.init_cache, cfg, batch, seq))
+        c_sh = jax.tree.map(
+            lambda a: _ns(mesh, a.shape, dp, "model", None, None)
+            if hasattr(a, "ndim") and a.ndim == 4
+            else NamedSharding(mesh, P()), cache_abs)
+        tok_abs = _sds((batch,), jnp.int32)
+        t_sh = _ns(mesh, (batch,), dp)
+
+        def serve(params, cache, token):
+            return tfm.decode_step(params, cache, token, cfg, hooks)
+
+        return jax.jit(serve, in_shardings=(p_sh, c_sh, t_sh)).lower(
+            params_abs, cache_abs, tok_abs)
+
+    return Cell(arch=arch, shape=shape_name, kind=kind, lower=lower,
+                model_flops=flops, tokens=tokens)
+
+
+def lm_shapes_for(cfg: tfm.LMConfig) -> tuple[str, ...]:
+    shapes = ["train_4k", "prefill_32k", "decode_32k"]
+    if cfg.sub_quadratic:
+        shapes.append("long_500k")   # full-attention archs skip (DESIGN §4)
+    return tuple(shapes)
+
+
+# ---------------------------------------------------------------------------
+# GNN cells
+# ---------------------------------------------------------------------------
+
+GNN_SHAPES = {
+    "full_graph_sm": dict(n=2708, e=10556, d_feat=1433, kind="train"),
+    "minibatch_lg": dict(n=169984, e=168960, d_feat=602, kind="train",
+                         note="padded 1024-seed fanout-15-10 subgraph"),
+    "ogb_products": dict(n=2449029, e=61859140, d_feat=100, kind="train"),
+    "molecule": dict(n=30 * 128, e=64 * 128, d_feat=16, kind="train",
+                     n_graphs=128),
+}
+
+
+def gnn_abstract_batch(shape_name: str, molecular: bool):
+    """ShapeDtypeStruct batch for a GNN cell (padded sizes)."""
+    info = GNN_SHAPES[shape_name]
+    n = -(-info["n"] // 8) * 8
+    e = -(-info["e"] // 128) * 128
+    ng = info.get("n_graphs", 1)
+    b = {
+        "src": _sds((e,), jnp.int32),
+        "dst": _sds((e,), jnp.int32),
+        "node_mask": _sds((n,), jnp.bool_),
+        "graph_id": _sds((n,), jnp.int32),
+    }
+    if molecular:
+        b["species"] = _sds((n,), jnp.int32)
+        b["pos"] = _sds((n, 3), jnp.float32)
+        b["edge_mask"] = _sds((e,), jnp.bool_)
+        b["y"] = _sds((ng,), jnp.float32)
+    else:
+        b["x"] = _sds((n, info["d_feat"]), jnp.float32)
+        b["pos"] = _sds((n, 3), jnp.float32)
+        b["y"] = _sds((n,), jnp.int32)
+    return b, n, e, ng
+
+
+def gnn_batch_shardings(mesh: Mesh, batch_abs: dict):
+    dp = data_axes(mesh)
+    out = {}
+    for k, v in batch_abs.items():
+        if k in ("src", "dst", "edge_mask", "t_kj", "t_ji", "t_mask"):
+            out[k] = _ns(mesh, v.shape, dp)       # edge/triplet-sharded
+        elif k == "x":
+            out[k] = _ns(mesh, v.shape, None, "model")
+        else:
+            out[k] = NamedSharding(mesh, P())
+    return out
+
+
+def gnn_cell(arch: str, shape_name: str, *, init_fn, loss_fn,
+             batch_to_model, molecular: bool, flops_per_edge: float,
+             extra_abstract=None) -> Cell:
+    """Generic GNN train-step cell.
+
+    batch_to_model(batch_dict, n, e, ng) -> the model's batch object.
+    extra_abstract(n, e) -> dict of additional edge-like inputs
+    (e.g. DimeNet triplet indices), sharded over the data axes.
+    """
+    info = GNN_SHAPES[shape_name]
+
+    def lower(mesh: Mesh):
+        batch_abs, n, e, ng = gnn_abstract_batch(shape_name, molecular)
+        if extra_abstract is not None:
+            batch_abs.update(extra_abstract(n, e))
+        b_sh = gnn_batch_shardings(mesh, batch_abs)
+        params_abs = jax.eval_shape(init_fn, jax.random.PRNGKey(0))
+        p_sh = jax.tree.map(
+            lambda a: NamedSharding(mesh, P()), params_abs)
+        opt_abs = jax.eval_shape(adamw_init, params_abs)
+        o_sh = {"m": p_sh, "v": p_sh, "step": NamedSharding(mesh, P())}
+        tcfg = TrainConfig(total_steps=10_000)
+
+        def loss(params, batch):
+            model_batch = batch_to_model(batch, n, e, ng)
+            return loss_fn(params, model_batch)
+
+        step = make_train_step(loss, tcfg,
+                               in_shardings=(p_sh, o_sh, b_sh),
+                               donate=False)
+        return step.lower(params_abs, opt_abs, batch_abs)
+
+    return Cell(arch=arch, shape=shape_name, kind="train", lower=lower,
+                model_flops=flops_per_edge * info["e"],
+                tokens=info["n"], notes=info.get("note", ""))
+
+
+GNN_SHAPE_NAMES = tuple(GNN_SHAPES)

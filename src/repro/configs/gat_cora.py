@@ -1,0 +1,48 @@
+"""gat-cora [arXiv:1710.10903; paper]
+2 layers, d_hidden=8, 8 heads, attention aggregator.
+
+in_dim/n_classes track the shape cell (the brief's exact config —
+in_dim 1433, 7 classes — is the full_graph_sm/Cora cell; other cells
+keep the architecture and adapt the input dim, per DESIGN.md §4).
+"""
+from functools import partial
+
+from repro.configs import ArchSpec, register
+from repro.configs.cells import GNN_SHAPES, GNN_SHAPE_NAMES, gnn_cell
+from repro.models.gnn import gat
+from repro.models.gnn.layers import GraphBatch
+
+_CLASSES = {"full_graph_sm": 7, "minibatch_lg": 47,
+            "ogb_products": 47, "molecule": 16}
+
+
+def _cfg_for(shape: str) -> gat.GATConfig:
+    return gat.GATConfig(in_dim=GNN_SHAPES[shape]["d_feat"],
+                         n_classes=_CLASSES[shape])
+
+
+FULL = _cfg_for("full_graph_sm")
+SMOKE = gat.GATConfig(in_dim=32, n_classes=7)
+
+
+def _to_batch(b, n, e, ng):
+    return GraphBatch(n_nodes=n, n_graphs=ng, x=b["x"], src=b["src"],
+                      dst=b["dst"], node_mask=b["node_mask"],
+                      graph_id=b["graph_id"], pos=b["pos"], y=b["y"])
+
+
+def build_cell(cfg, shape):
+    c = _cfg_for(shape)
+    return gnn_cell(
+        "gat-cora", shape,
+        init_fn=partial(gat.init_params, c),
+        loss_fn=lambda p, mb: gat.loss_fn(p, mb, c),
+        batch_to_model=_to_batch, molecular=False,
+        flops_per_edge=2 * 2.0 * c.n_heads * c.d_hidden * 4)
+
+
+ARCH = register(ArchSpec(
+    name="gat-cora", kind="gnn", full=FULL, smoke=SMOKE,
+    shapes=GNN_SHAPE_NAMES, build_cell=build_cell,
+    notes="SDDMM -> edge-softmax -> SpMM regime",
+))

@@ -1,0 +1,52 @@
+"""nequip [arXiv:2101.03164; paper]
+5 layers, d_hidden (mult) = 32, l_max=2, n_rbf=8, cutoff=5,
+E(3) tensor-product equivariance (SE(3) here — parity untracked,
+see DESIGN.md §Paper-faithfulness).
+
+Non-molecular cells: point-cloud treatment (synthetic positions,
+hashed species), as for dimenet.
+"""
+from functools import partial
+
+from repro.configs import ArchSpec, register
+from repro.configs.cells import GNN_SHAPE_NAMES, gnn_cell
+from repro.models.gnn import dimenet as dn
+from repro.models.gnn import nequip as nq
+
+FULL = nq.NequIPConfig()
+SMOKE = nq.NequIPConfig(n_layers=2, mult=8, n_species=8)
+
+
+def _to_batch_factory(cfg):
+    def to_batch(b, n, e, ng):
+        import jax.numpy as jnp
+        dummy_t = jnp.zeros((8,), jnp.int32)
+        return dn.TripletBatch(
+            n_nodes=n, n_edges=e, n_graphs=ng,
+            species=b["species"], pos=b["pos"], node_mask=b["node_mask"],
+            graph_id=b["graph_id"], src=b["src"], dst=b["dst"],
+            edge_mask=b["edge_mask"], t_kj=dummy_t, t_ji=dummy_t,
+            t_mask=dummy_t.astype(bool), y=b["y"])
+    return to_batch
+
+
+def build_cell(cfg, shape):
+    c = FULL
+    n_paths = len(c.paths)
+    # per-edge: all CG paths, ~mult * (2l+1)^2 MACs each + radial MLP
+    fpe = c.n_layers * 2.0 * (n_paths * c.mult * 15
+                              + c.n_rbf * c.mult
+                              + c.mult * n_paths * c.mult)
+    return gnn_cell(
+        "nequip", shape,
+        init_fn=partial(nq.init_params, c),
+        loss_fn=lambda p, mb: nq.loss_fn(p, mb, c),
+        batch_to_model=_to_batch_factory(c), molecular=True,
+        flops_per_edge=fpe)
+
+
+ARCH = register(ArchSpec(
+    name="nequip", kind="gnn", full=FULL, smoke=SMOKE,
+    shapes=GNN_SHAPE_NAMES, build_cell=build_cell,
+    notes="irrep tensor-product (CG) + scatter regime",
+))

@@ -1,0 +1,46 @@
+"""pna [arXiv:2004.05718; paper]
+4 layers, d_hidden=75, aggregators mean/max/min/std,
+scalers identity/amplification/attenuation.
+"""
+from functools import partial
+
+from repro.configs import ArchSpec, register
+from repro.configs.cells import GNN_SHAPES, GNN_SHAPE_NAMES, gnn_cell
+from repro.models.gnn import pna
+from repro.models.gnn.layers import GraphBatch
+
+_CLASSES = {"full_graph_sm": 7, "minibatch_lg": 47,
+            "ogb_products": 47, "molecule": 16}
+
+
+def _cfg_for(shape: str) -> pna.PNAConfig:
+    return pna.PNAConfig(in_dim=GNN_SHAPES[shape]["d_feat"],
+                         n_classes=_CLASSES[shape])
+
+
+FULL = _cfg_for("ogb_products")
+SMOKE = pna.PNAConfig(in_dim=16, d_hidden=24, n_classes=5)
+
+
+def _to_batch(b, n, e, ng):
+    return GraphBatch(n_nodes=n, n_graphs=ng, x=b["x"], src=b["src"],
+                      dst=b["dst"], node_mask=b["node_mask"],
+                      graph_id=b["graph_id"], pos=b["pos"], y=b["y"])
+
+
+def build_cell(cfg, shape):
+    c = _cfg_for(shape)
+    d = c.d_hidden
+    return gnn_cell(
+        "pna", shape,
+        init_fn=partial(pna.init_params, c),
+        loss_fn=lambda p, mb: pna.loss_fn(p, mb, c),
+        batch_to_model=_to_batch, molecular=False,
+        flops_per_edge=c.n_layers * 2.0 * (2 * d) * d * 2)
+
+
+ARCH = register(ArchSpec(
+    name="pna", kind="gnn", full=FULL, smoke=SMOKE,
+    shapes=GNN_SHAPE_NAMES, build_cell=build_cell,
+    notes="multi-aggregator (4 reducers x 3 degree scalers)",
+))

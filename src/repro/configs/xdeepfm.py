@@ -1,0 +1,105 @@
+"""xdeepfm [arXiv:1803.05170; paper]
+39 sparse fields, embed_dim=10, CIN 200-200-200, MLP 400-400.
+
+Embedding tables: Criteo-scale vocabulary (~20M rows total, a few huge
+fields + a long tail), row-sharded over `model` (table parallelism).
+"""
+import jax
+import jax.numpy as jnp
+from functools import partial
+
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import ArchSpec, register
+from repro.configs.cells import Cell, _ns, _sds
+from repro.distributed import sharding as shr
+from repro.distributed.mesh import data_axes
+from repro.models import xdeepfm as xd
+from repro.optim import adamw_init
+from repro.runtime.train_loop import TrainConfig, make_train_step
+
+_BIG = (10_000_000, 5_000_000, 2_000_000, 1_000_000, 500_000)
+_TAIL = tuple(int(100_000 / (1 + i)) + 128 for i in range(34))
+
+FULL = xd.XDeepFMConfig(field_sizes=_BIG + _TAIL)
+SMOKE = xd.XDeepFMConfig(
+    n_fields=8, embed_dim=6, cin_layers=(16, 16), mlp_dims=(32,),
+    field_sizes=(128, 96, 64, 64, 32, 32, 16, 16))
+
+SHAPES = {
+    "train_batch": dict(batch=65536, kind="train"),
+    "serve_p99": dict(batch=512, kind="serve"),
+    "serve_bulk": dict(batch=262144, kind="serve"),
+    "retrieval_cand": dict(batch=1, n_cand=1_000_000, kind="retrieval"),
+}
+VALUES_PER_FIELD = 3
+
+
+def _cell_flops(cfg: xd.XDeepFMConfig, batch: int) -> float:
+    f = 0.0
+    h_prev = cfg.n_fields
+    for h in cfg.cin_layers:
+        f += 2.0 * h * h_prev * cfg.n_fields * cfg.embed_dim
+        h_prev = h
+    dims = [cfg.n_fields * cfg.embed_dim, *cfg.mlp_dims, 1]
+    f += sum(2.0 * a * b for a, b in zip(dims, dims[1:]))
+    return f * batch
+
+
+def build_cell(cfg: xd.XDeepFMConfig, shape: str) -> Cell:
+    info = SHAPES[shape]
+    B = info["batch"]
+    kind = info["kind"]
+
+    def lower(mesh):
+        dp = data_axes(mesh)
+        params_abs = jax.eval_shape(
+            partial(xd.init_params, cfg), jax.random.PRNGKey(0))
+        p_sh = shr.tree_shardings(
+            params_abs, mesh,
+            lambda path, leaf, m: shr.recsys_param_spec(path, leaf, m))
+        F, V = cfg.n_fields, VALUES_PER_FIELD
+
+        if kind == "train":
+            batch_abs = {"indices": _sds((B, F, V), jnp.int32),
+                         "labels": _sds((B,), jnp.int32)}
+            b_sh = {"indices": _ns(mesh, (B, F, V), dp, None, None),
+                    "labels": _ns(mesh, (B,), dp)}
+            opt_abs = jax.eval_shape(adamw_init, params_abs)
+            o_sh = {"m": p_sh, "v": p_sh, "step": NamedSharding(mesh, P())}
+            step = make_train_step(
+                lambda p, b: xd.loss_fn(p, b, cfg),
+                TrainConfig(total_steps=10_000),
+                in_shardings=(p_sh, o_sh, b_sh), donate=False)
+            return step.lower(params_abs, opt_abs, batch_abs)
+
+        if kind == "serve":
+            idx_abs = _sds((B, F, V), jnp.int32)
+            i_sh = _ns(mesh, (B, F, V), dp, None, None)
+            fn = jax.jit(lambda p, i: xd.forward(p, {"indices": i}, cfg),
+                         in_shardings=(p_sh, i_sh))
+            return fn.lower(params_abs, idx_abs)
+
+        # retrieval: one query vs n_cand candidates
+        n_cand = info["n_cand"]
+        idx_abs = _sds((1, F, V), jnp.int32)
+        cand_abs = _sds((n_cand, cfg.embed_dim), jnp.float32)
+        c_sh = _ns(mesh, (n_cand, cfg.embed_dim), (*dp, "model"), None)
+        fn = jax.jit(
+            lambda p, q, c: xd.retrieval_scores(p, q, c, cfg),
+            in_shardings=(p_sh, NamedSharding(mesh, P()), c_sh))
+        return fn.lower(params_abs, idx_abs, cand_abs)
+
+    flops = (_cell_flops(cfg, B) if kind != "retrieval"
+             else 2.0 * info["n_cand"] * cfg.embed_dim)
+    if kind == "train":
+        flops *= 3  # fwd + bwd
+    return Cell(arch="xdeepfm", shape=shape, kind=kind, lower=lower,
+                model_flops=flops, tokens=B)
+
+
+ARCH = register(ArchSpec(
+    name="xdeepfm", kind="recsys", full=FULL, smoke=SMOKE,
+    shapes=tuple(SHAPES), build_cell=build_cell,
+    notes="embedding-bag (take+segment_sum) + CIN Pallas kernel",
+))

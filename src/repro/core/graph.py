@@ -1,0 +1,202 @@
+"""Device-ready graph container for the SSSP engine and GNN substrate.
+
+Design (see DESIGN.md §2):
+  * The paper (Garg 2018) assumes access to *incoming* edges (its assumption
+    #2).  We therefore store the edge list sorted by **destination** (CSC
+    order) as the primary form: every per-round operation of the SSSP engine
+    ("for each edge, combine a value at src, min/sum-reduce at dst") is a
+    segment reduction over `dst`.
+  * Arrays are padded to a fixed size so shapes are static under jit.
+    Padding edges use ``src = dst = n`` and ``w = +inf``; vertex-segment
+    reductions use ``num_segments = n + 1`` and slice off the sentinel row.
+  * An optional dense ELL ("padded in-neighbour") form `in_src/in_w` of shape
+    ``[n_pad, deg_pad]`` feeds the Pallas relax kernel (row-min over the
+    in-neighbourhood is a dense, VPU-aligned reduction).
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+INF = jnp.float32(jnp.inf)
+
+
+def _pad_to(x: np.ndarray, size: int, fill) -> np.ndarray:
+    out = np.full((size,) + x.shape[1:], fill, dtype=x.dtype)
+    out[: x.shape[0]] = x
+    return out
+
+
+def round_up(x: int, m: int) -> int:
+    return ((x + m - 1) // m) * m
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class Graph:
+    """Static, padded, dst-sorted edge-list graph.
+
+    Fields with leading dim ``e_pad`` are edge arrays (dst-sorted); fields
+    with leading dim ``n`` are vertex arrays.  ``n``/``e`` are static python
+    ints (pytree aux data) so they can drive shapes under jit.
+    """
+
+    # --- static metadata ---
+    n: int = dataclasses.field(metadata=dict(static=True))
+    e: int = dataclasses.field(metadata=dict(static=True))
+    e_pad: int = dataclasses.field(metadata=dict(static=True))
+
+    # --- edge arrays, sorted by dst; padding: src=dst=n, w=inf ---
+    src: jax.Array  # int32[e_pad]
+    dst: jax.Array  # int32[e_pad]
+    w: jax.Array    # float32[e_pad]
+
+    # --- static per-vertex derived arrays ---
+    in_deg: jax.Array      # int32[n]  number of incoming edges
+    out_deg: jax.Array     # int32[n]
+    in_weight: jax.Array   # float32[n]  min incoming edge weight (inf if none)
+    out_weight: jax.Array  # float32[n]  min outgoing edge weight (inf if none)
+
+    @property
+    def num_segments(self) -> int:
+        return self.n + 1  # one sentinel row for padding edges
+
+    # --- the three segment primitives every engine round uses ---
+    def seg_min_at_dst(self, edge_vals: jax.Array) -> jax.Array:
+        """min-reduce edge values at their destination vertex -> float32[n]."""
+        out = jax.ops.segment_min(
+            edge_vals, self.dst, num_segments=self.num_segments,
+            indices_are_sorted=True)
+        return out[: self.n]
+
+    def seg_max_at_dst(self, edge_vals: jax.Array) -> jax.Array:
+        out = jax.ops.segment_max(
+            edge_vals, self.dst, num_segments=self.num_segments,
+            indices_are_sorted=True)
+        return out[: self.n]
+
+    def seg_sum_at_dst(self, edge_vals: jax.Array) -> jax.Array:
+        out = jax.ops.segment_sum(
+            edge_vals, self.dst, num_segments=self.num_segments,
+            indices_are_sorted=True)
+        return out[: self.n]
+
+    def gather_src(self, vertex_vals: jax.Array, fill=INF) -> jax.Array:
+        """Gather a vertex array at edge sources; padding edges get `fill`."""
+        ext = jnp.concatenate(
+            [vertex_vals, jnp.full((1,), fill, vertex_vals.dtype)])
+        return ext[self.src]
+
+    def gather_dst(self, vertex_vals: jax.Array, fill=INF) -> jax.Array:
+        ext = jnp.concatenate(
+            [vertex_vals, jnp.full((1,), fill, vertex_vals.dtype)])
+        return ext[self.dst]
+
+
+def build_graph(n: int, src, dst, w, *, edge_pad_multiple: int = 128) -> Graph:
+    """Build a device-ready Graph from numpy COO arrays (host-side)."""
+    src = np.asarray(src, np.int32)
+    dst = np.asarray(dst, np.int32)
+    w = np.asarray(w, np.float32)
+    e = int(src.shape[0])
+    if e:
+        assert src.min() >= 0 and src.max() < n, "src out of range"
+        assert dst.min() >= 0 and dst.max() < n, "dst out of range"
+        assert (w > 0).all(), "paper assumes strictly positive weights"
+        assert (src != dst).all(), "paper assumes loop-free graphs"
+    # dst-sorted (CSC order); stable so parallel edges keep input order.
+    order = np.argsort(dst, kind="stable")
+    src, dst, w = src[order], dst[order], w[order]
+
+    e_pad = max(edge_pad_multiple, round_up(max(e, 1), edge_pad_multiple))
+    src_p = _pad_to(src, e_pad, n)
+    dst_p = _pad_to(dst, e_pad, n)
+    w_p = _pad_to(w, e_pad, np.inf)
+
+    in_deg = np.bincount(dst, minlength=n).astype(np.int32)
+    out_deg = np.bincount(src, minlength=n).astype(np.int32)
+    in_weight = np.full(n, np.inf, np.float32)
+    np.minimum.at(in_weight, dst, w)
+    out_weight = np.full(n, np.inf, np.float32)
+    np.minimum.at(out_weight, src, w)
+
+    return Graph(
+        n=n, e=e, e_pad=e_pad,
+        src=jnp.asarray(src_p), dst=jnp.asarray(dst_p), w=jnp.asarray(w_p),
+        in_deg=jnp.asarray(in_deg), out_deg=jnp.asarray(out_deg),
+        in_weight=jnp.asarray(in_weight), out_weight=jnp.asarray(out_weight),
+    )
+
+
+@dataclasses.dataclass(frozen=True)
+class EllGraph:
+    """Dense padded in-neighbour (ELL) form for the Pallas relax kernel.
+
+    ``in_src[i, j]`` is the j-th in-neighbour of vertex i (or ``n`` padding),
+    ``in_w[i, j]`` the corresponding weight (or +inf).  Rows are padded to
+    ``deg_pad`` (multiple of 128 lanes) and vertices to ``n_pad`` (multiple
+    of 8 sublanes) so blocks tile the TPU VPU exactly.
+    """
+
+    n: int
+    n_pad: int
+    deg_pad: int
+    in_src: jax.Array  # int32[n_pad, deg_pad]
+    in_w: jax.Array    # float32[n_pad, deg_pad]
+
+
+def build_ell(n: int, src, dst, w, *, lane: int = 128, sublane: int = 8,
+              max_deg_cap: int | None = None) -> EllGraph:
+    src = np.asarray(src, np.int64)
+    dst = np.asarray(dst, np.int64)
+    w = np.asarray(w, np.float32)
+    in_deg = np.bincount(dst, minlength=n)
+    max_deg = int(in_deg.max()) if len(dst) else 0
+    if max_deg_cap is not None and max_deg > max_deg_cap:
+        raise ValueError(
+            f"max in-degree {max_deg} exceeds ELL cap {max_deg_cap}; "
+            "use the edge-list (segment-op) path for power-law graphs")
+    deg_pad = max(lane, round_up(max(max_deg, 1), lane))
+    n_pad = max(sublane, round_up(n, sublane))
+    in_src = np.full((n_pad, deg_pad), n, np.int32)
+    in_w = np.full((n_pad, deg_pad), np.inf, np.float32)
+    order = np.argsort(dst, kind="stable")
+    slot = np.zeros(n, np.int64)
+    for idx in order:
+        d = dst[idx]
+        in_src[d, slot[d]] = src[idx]
+        in_w[d, slot[d]] = w[idx]
+        slot[d] += 1
+    return EllGraph(n=n, n_pad=n_pad, deg_pad=deg_pad,
+                    in_src=jnp.asarray(in_src), in_w=jnp.asarray(in_w))
+
+
+# ---------------------------------------------------------------------------
+# Host-side adjacency view for the sequential reference algorithms.
+# ---------------------------------------------------------------------------
+
+class HostGraph:
+    """Plain-python adjacency view (out- and in-lists) for reference algos."""
+
+    def __init__(self, n: int, src, dst, w):
+        self.n = int(n)
+        self.src = np.asarray(src, np.int64)
+        self.dst = np.asarray(dst, np.int64)
+        self.w = np.asarray(w, np.float64)
+        self.e = len(self.src)
+        assert (self.w > 0).all(), "strictly positive weights required"
+        self.out: list[list[tuple[int, float]]] = [[] for _ in range(self.n)]
+        self.inn: list[list[tuple[int, float]]] = [[] for _ in range(self.n)]
+        for s, d, ww in zip(self.src, self.dst, self.w):
+            self.out[s].append((int(d), float(ww)))
+            self.inn[d].append((int(s), float(ww)))
+
+    def to_device(self, **kw) -> Graph:
+        return build_graph(self.n, self.src, self.dst, self.w, **kw)
+
+    def to_ell(self, **kw) -> EllGraph:
+        return build_ell(self.n, self.src, self.dst, self.w, **kw)

@@ -1,0 +1,51 @@
+"""Bellman-Ford baseline (the paper's label-correcting comparison point).
+
+Pure bulk-synchronous: every round relaxes every edge whose source is
+discovered; terminates when D reaches a fixpoint (the paper's `changed`
+early-termination optimization).  No fixing rules, no lower bounds —
+this is SP4 with everything stripped away, and the control for measuring
+what the paper's C/threshold machinery buys.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.graph import Graph, INF
+
+
+@dataclasses.dataclass
+class BFResult:
+    dist: jax.Array
+    rounds: int
+
+
+@partial(jax.jit, static_argnames=("source", "max_rounds"))
+def _run(g: Graph, source: int, max_rounds: int):
+    D0 = jnp.full((g.n,), INF, jnp.float32).at[source].set(0.0)
+
+    def body(carry):
+        D, _, r = carry
+        Dsrc = g.gather_src(D)
+        cand = jnp.where(Dsrc < INF, Dsrc + g.w, INF)
+        D_new = jnp.minimum(D, g.seg_min_at_dst(cand))
+        changed = jnp.any(D_new < D)
+        return D_new, changed, r + 1
+
+    def cond(carry):
+        _, changed, r = carry
+        return changed & (r < max_rounds)
+
+    D, _, rounds = jax.lax.while_loop(
+        cond, body, (D0, jnp.bool_(True), jnp.int32(0)))
+    return D, rounds
+
+
+def run_bellman_ford(g: Graph, source: int = 0,
+                     max_rounds: int | None = None) -> BFResult:
+    D, rounds = _run(g, source, max_rounds or g.n + 1)
+    return BFResult(dist=D, rounds=int(rounds))

@@ -1,0 +1,162 @@
+"""Multi-device / multi-pod SSSP: edge-sharded shard_map engine.
+
+Mapping of the paper's PRAM model onto the TPU mesh (DESIGN.md §2/§5):
+
+  * Edge arrays (src, dst, w) are sharded over the mesh's data axes —
+    each device owns a contiguous block of the dst-sorted edge list.
+  * Vertex vectors (D, C, fixed) are replicated; each round every device
+    computes its local segment reductions and the mesh combines them with
+    `lax.pmin` / `pmax` (an all-reduce with MIN — the concurrent-min
+    memory of the CRCW PRAM, in ICI collectives).
+  * The whole while_loop runs inside one shard_map call, so rounds need
+    no host round-trips and XLA can schedule the pmin of round r against
+    the gathers of round r (compute/comm overlap).
+
+For graphs whose vertex vectors outgrow a chip (≥1e8 vertices) the
+vertex axis would additionally be sharded over `model`; that variant is
+exercised by the dry-run configs in configs/sssp_*.py.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+from jax.experimental.shard_map import shard_map
+
+from repro.core.graph import Graph, INF, round_up
+from repro.core.sssp.engine import (
+    SSSPConfig, SSSPState, SP4_CONFIG, _init_state, _round, _cond)
+
+
+def shard_graph_edges(g: Graph, n_shards: int) -> Graph:
+    """Re-pad edge arrays so e_pad divides evenly across shards."""
+    e_pad = round_up(g.e_pad, n_shards * 128)
+    if e_pad == g.e_pad:
+        return g
+    pad = e_pad - g.e_pad
+    return dataclasses.replace(
+        g, e_pad=e_pad,
+        src=jnp.concatenate([g.src, jnp.full((pad,), g.n, g.src.dtype)]),
+        dst=jnp.concatenate([g.dst, jnp.full((pad,), g.n, g.dst.dtype)]),
+        w=jnp.concatenate([g.w, jnp.full((pad,), INF, g.w.dtype)]),
+    )
+
+
+def run_sssp_distributed(g: Graph, source: int = 0,
+                         cfg: SSSPConfig = SP4_CONFIG,
+                         mesh: Mesh | None = None,
+                         axes: tuple[str, ...] = ("data",)):
+    """Run the engine with edges sharded over `axes` of `mesh`.
+
+    Returns (D, C, fixed, rounds) — bitwise identical to the single-device
+    engine (min is associative and the edge partition is disjoint).
+    """
+    if mesh is None:
+        mesh = Mesh(np.asarray(jax.devices()).reshape(-1), ("data",))
+        axes = ("data",)
+    n_shards = int(np.prod([mesh.shape[a] for a in axes]))
+    g = shard_graph_edges(g, n_shards)
+    max_rounds = cfg.max_rounds or g.n + 2
+
+    edge_spec = P(axes)          # shard edge arrays along the flat data axes
+    vert_spec = P()              # vertex arrays replicated
+
+    # a device-local Graph view: same static metadata, local edge block
+    def local_graph(src, dst, w):
+        return dataclasses.replace(
+            g, e_pad=g.e_pad // n_shards, src=src, dst=dst, w=w)
+
+    def seg_min_dist(lg):
+        def f(edge_vals):
+            loc = jax.ops.segment_min(
+                edge_vals, lg.dst, num_segments=lg.num_segments,
+                indices_are_sorted=True)[: lg.n]
+            return jax.lax.pmin(loc, axes)
+        return f
+
+    def seg_max_dist(lg):
+        def f(edge_vals):
+            loc = jax.ops.segment_max(
+                edge_vals, lg.dst, num_segments=lg.num_segments,
+                indices_are_sorted=True)[: lg.n]
+            return jax.lax.pmax(loc, axes)
+        return f
+
+    def seg_min2_dist(lg):
+        """Two independent reductions -> ONE stacked pmin all-reduce
+        (halves per-round collective launches; §Perf iteration 3.1)."""
+        def f(ev_a, ev_b):
+            la = jax.ops.segment_min(
+                ev_a, lg.dst, num_segments=lg.num_segments,
+                indices_are_sorted=True)[: lg.n]
+            lb = jax.ops.segment_min(
+                ev_b, lg.dst, num_segments=lg.num_segments,
+                indices_are_sorted=True)[: lg.n]
+            both = jax.lax.pmin(jnp.stack([la, lb]), axes)
+            return both[0], both[1]
+        return f
+
+    def body(src, dst, w):
+        lg = local_graph(src, dst, w)
+        smin, smax = seg_min_dist(lg), seg_max_dist(lg)
+        smin2 = seg_min2_dist(lg)
+        state = _init_state(lg, source)
+        state = jax.lax.while_loop(
+            lambda s: _cond(s, max_rounds),
+            lambda s: _round(lg, cfg, s, seg_min=smin, seg_max=smax,
+                             seg_min2=smin2),
+            state)
+        return state.D, state.C, state.fixed, state.round
+
+    fn = shard_map(
+        body, mesh=mesh,
+        in_specs=(edge_spec, edge_spec, edge_spec),
+        out_specs=(vert_spec, vert_spec, vert_spec, vert_spec),
+        check_rep=False)
+    return jax.jit(fn)(g.src, g.dst, g.w)
+
+
+def lower_distributed(g: Graph, mesh: Mesh, source: int = 0,
+                      cfg: SSSPConfig = SP4_CONFIG,
+                      axes: tuple[str, ...] = ("data",)):
+    """Lower (no execute) for the dry-run: returns jax.stages.Lowered."""
+    n_shards = int(np.prod([mesh.shape[a] for a in axes]))
+    g = shard_graph_edges(g, n_shards)
+    max_rounds = cfg.max_rounds or g.n + 2
+    edge_spec, vert_spec = P(axes), P()
+
+    def body(src, dst, w):
+        lg = dataclasses.replace(
+            g, e_pad=g.e_pad // n_shards, src=src, dst=dst, w=w)
+
+        def smin(ev):
+            loc = jax.ops.segment_min(
+                ev, lg.dst, num_segments=lg.num_segments,
+                indices_are_sorted=True)[: lg.n]
+            return jax.lax.pmin(loc, axes)
+
+        def smax(ev):
+            loc = jax.ops.segment_max(
+                ev, lg.dst, num_segments=lg.num_segments,
+                indices_are_sorted=True)[: lg.n]
+            return jax.lax.pmax(loc, axes)
+
+        state = _init_state(lg, source)
+        state = jax.lax.while_loop(
+            lambda s: _cond(s, max_rounds),
+            lambda s: _round(lg, cfg, s, seg_min=smin, seg_max=smax),
+            state)
+        return state.D, state.C, state.fixed, state.round
+
+    fn = shard_map(body, mesh=mesh,
+                   in_specs=(edge_spec, edge_spec, edge_spec),
+                   out_specs=(vert_spec,) * 4, check_rep=False)
+    shapes = (jax.ShapeDtypeStruct((g.e_pad,), jnp.int32),
+              jax.ShapeDtypeStruct((g.e_pad,), jnp.int32),
+              jax.ShapeDtypeStruct((g.e_pad,), jnp.float32))
+    in_shardings = tuple(NamedSharding(mesh, edge_spec) for _ in range(3))
+    return jax.jit(fn, in_shardings=in_shardings).lower(*shapes)

@@ -1,0 +1,369 @@
+"""The paper's contribution as a composable, bulk-synchronous JAX engine.
+
+Garg's four algorithms share one structure: *per round, fix as many
+vertices as the available evidence allows, then relax*.  On a TPU (and
+in JAX's SPMD model) the heaps/worklists of SP1–SP3 become dense masked
+min-reductions and boolean frontiers — exactly the move the paper itself
+makes for SP4 ("Step 1 … doubly logarithmic tree").  The engine exposes
+each fixing rule as an independent predicate so SP1/SP2/SP3/SP4 are
+*configurations* of one program:
+
+  R_min  — Dijkstra:          fix x with  D[x] == minD            (progress)
+  R_pred — SP1  (Lemma 2):    fix x whose in-edges are all relaxed
+  R_in   — SP2  (Lemma 5):    fix x with  D[x] <= minD + inWeight_nf[x]
+  R_out  — Lemma 8 (Crauser): fix x with  D[x] <= min(D+outWeight | ¬fixed)
+  R_lb   — SP3/SP4 (Lem 6+7): fix x with  C[x] == D[x] after C-propagation
+
+where ``inWeight_nf[x]`` is the min weight over in-edges whose source is
+not yet fixed (the bulk-synchronous strengthening of the paper's
+"exclude the discoverer" refinement: every edge that can still lower
+D[x] must come from a vertex whose final cost is ≥ minD).
+
+Label-setting configurations relax only out-edges of fixed vertices
+(SP1–SP3); the label-correcting configuration (SP4) relaxes every
+discovered edge each round, Bellman-Ford style.
+
+``c_prop_iters > 1`` is a *beyond-paper* knob: applying Eqn (1) k times
+per round lets lower bounds chase the upper bounds along chains of k
+vertices, fixing whole runs per round (the paper applies it once).
+
+All reductions are `segment_min/max` over the dst-sorted edge list —
+the identical kernel regime as GNN message passing (see kernels/relax.py
+for the Pallas version used on the ELL layout).
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.graph import Graph, INF
+
+Rules = frozenset
+
+
+@dataclasses.dataclass(frozen=True)
+class SSSPConfig:
+    rules: frozenset[str] = frozenset({"min", "pred", "in", "out", "lb"})
+    label_correcting: bool = False   # SP4 relaxes all discovered edges
+    c_prop_iters: int = 1            # Eqn-(1) applications per round
+    max_rounds: int | None = None    # default n
+    use_pallas: bool = False         # route relax through the Pallas kernel
+
+    def __post_init__(self):
+        unknown = self.rules - {"min", "pred", "in", "out", "lb"}
+        if unknown:
+            raise ValueError(f"unknown rules {unknown}")
+        if not ({"min", "out"} & self.rules):
+            raise ValueError("need 'min' or 'out' for progress guarantee")
+
+
+SP1_RULES = frozenset({"min", "pred"})
+SP2_RULES = frozenset({"min", "pred", "in"})
+SP3_RULES = frozenset({"min", "pred", "in", "out", "lb"})
+SP3_CONFIG = SSSPConfig(rules=SP3_RULES, label_correcting=False)
+SP4_CONFIG = SSSPConfig(rules=SP3_RULES, label_correcting=True)
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class SSSPState:
+    D: jax.Array        # float32[n] upper bounds
+    C: jax.Array        # float32[n] lower bounds
+    fixed: jax.Array    # bool[n]
+    explored: jax.Array  # bool[n]: fixed AND out-edges relaxed at final D.
+    #   The paper's fixed-vs-explored distinction (R = fixed ∧ ¬explored) is
+    #   load-bearing: a vertex fixed by the lb rule late in round r has its
+    #   out-edges relaxed only in round r+1, so the fixing rules of round
+    #   r+1 must run *after* that relaxation — hence relax-first ordering —
+    #   and termination must wait for fixed ∧ ¬explored to drain.
+    round: jax.Array    # int32 scalar
+    fixed_by: jax.Array  # int32[5] cumulative per-rule fix counts (ablation)
+
+
+@dataclasses.dataclass
+class SSSPResult:
+    dist: jax.Array
+    C: jax.Array
+    fixed: jax.Array
+    rounds: int
+    fixed_by: dict[str, int]
+    trace: list | None = None
+
+
+_RULE_ORDER = ("min", "pred", "in", "out", "lb")
+
+
+def _init_state(g: Graph, source: int) -> SSSPState:
+    D = jnp.full((g.n,), INF, jnp.float32).at[source].set(0.0)
+    C = jnp.zeros((g.n,), jnp.float32)
+    fixed = jnp.zeros((g.n,), bool)
+    return SSSPState(D=D, C=C, fixed=fixed, explored=fixed,
+                     round=jnp.int32(0), fixed_by=jnp.zeros(5, jnp.int32))
+
+
+def _round(g: Graph, cfg: SSSPConfig, state: SSSPState,
+           seg_min=None, seg_max=None, seg_min2=None) -> SSSPState:
+    """One bulk-synchronous round.
+
+    ``seg_min``/``seg_max`` default to the graph's local segment
+    reductions; the distributed engine (distributed.py) passes
+    edge-sharded versions that finish with a `lax.pmin`/`pmax` over the
+    mesh axis — the TPU analogue of the PRAM's concurrent-min memory.
+
+    ``seg_min2`` (optional) fuses TWO independent reductions into one
+    call — the distributed version stacks them into a single pmin
+    all-reduce.  Exactness: both reductions depend only on round-start
+    state (the relax candidates use old D/fixed; inWeight_nf uses old
+    fixed), so fusing changes no semantics (§Perf iteration 3.1).
+
+    Note the pred rule needs no reduction of its own when the in rule is
+    active: "no non-fixed in-edge" ⟺ inWeight_nf == +inf (§Perf 3.2).
+    """
+    seg_min = seg_min if seg_min is not None else g.seg_min_at_dst
+    seg_max = seg_max if seg_max is not None else g.seg_max_at_dst
+    D, C, fixed = state.D, state.C, state.fixed
+
+    # --- Step 1: D relaxation (the R-exploration of SP1–SP3 / Step 3 of
+    # SP4).  Relax FIRST, from previously-fixed sources (whose D is final),
+    # so every fixing rule below sees a D in which all out-edges of all
+    # fixed vertices have been applied — the invariant Lemma 2/5/8 need.
+    if cfg.label_correcting:
+        relax_src = D < INF      # Bellman-Ford style: every discovered edge
+    else:
+        relax_src = fixed        # label-setting: out-edges of fixed vertices
+    src_ok = g.gather_src(relax_src, fill=False)
+    Dsrc = g.gather_src(D)
+    cand = jnp.where(src_ok, Dsrc + g.w, INF)
+    nf_src = g.gather_src(~fixed, fill=False)  # bool per edge
+
+    need_inw = ("in" in cfg.rules) or ("pred" in cfg.rules)
+    in_w_nf = None
+    if need_inw and seg_min2 is not None:
+        D_relax, in_w_nf = seg_min2(cand, jnp.where(nf_src, g.w, INF))
+    else:
+        D_relax = seg_min(cand)
+        if need_inw:
+            in_w_nf = seg_min(jnp.where(nf_src, g.w, INF))
+    D = jnp.where(~fixed, jnp.minimum(D, D_relax), D)
+    explored = fixed  # all currently-fixed vertices are now relaxed-at-final-D
+
+    discovered = D < INF
+    active = discovered & ~fixed
+
+    # --- Step 2: global reductions (the heap minima of SP1–SP3) ---
+    minD = jnp.min(jnp.where(active, D, INF))
+    new_fix = jnp.zeros_like(fixed)
+    rule_counts = []
+
+    def count(mask):
+        rule_counts.append(jnp.sum(mask & active & ~new_fix, dtype=jnp.int32))
+        return mask
+
+    # R_min (Dijkstra's own rule; guarantees >=1 vertex fixed per round)
+    if "min" in cfg.rules:
+        new_fix = new_fix | count(active & (D <= minD))
+    else:
+        rule_counts.append(jnp.int32(0))
+
+    # R_pred (SP1, Lemma 2): no in-edge from a non-fixed source remains;
+    # all in-edges relaxed (step 1) => D final.  Derived from inWeight_nf
+    # (min over an empty set is +inf) — no separate reduction.
+    if "pred" in cfg.rules:
+        has_nf_pred = ~jnp.isinf(in_w_nf)
+        new_fix = new_fix | count(active & ~has_nf_pred)
+    else:
+        rule_counts.append(jnp.int32(0))
+
+    # R_in (SP2, Lemma 5 strengthened): D[x] <= minD + min in-weight over
+    # edges that can still relax (source not yet fixed).  Any pending
+    # contribution is cost[v]+w >= minD + inWeight_nf[x] >= D[x].
+    if "in" in cfg.rules:
+        new_fix = new_fix | count(active & (D <= minD + in_w_nf))
+    else:
+        rule_counts.append(jnp.int32(0))
+
+    # R_out (Lemma 8 / Crauser out-version)
+    if "out" in cfg.rules:
+        threshold = jnp.min(jnp.where(active, D + g.out_weight, INF))
+        new_fix = new_fix | count(active & (D <= threshold))
+    else:
+        rule_counts.append(jnp.int32(0))
+
+    fixed1 = fixed | new_fix
+
+    # --- Step 3: C update (Lemma 7 lift, then Lemma 6 / Eqn (1)) ---
+    if "lb" in cfg.rules:
+        C = jnp.where(fixed1, D, jnp.maximum(C, minD))
+        for _ in range(cfg.c_prop_iters):
+            Csrc = g.gather_src(C)
+            c_in = seg_min(Csrc + g.w)
+            C = jnp.where(~fixed1, jnp.maximum(C, c_in), C)
+        fix_lb = ~fixed1 & discovered & (C >= D)
+        rule_counts.append(jnp.sum(fix_lb, dtype=jnp.int32))
+        fixed2 = fixed1 | fix_lb
+        C = jnp.where(fixed2, D, C)
+    else:
+        rule_counts.append(jnp.int32(0))
+        fixed2 = fixed1
+        C = jnp.where(fixed2, D, C)
+
+    return SSSPState(
+        D=D, C=C, fixed=fixed2, explored=explored, round=state.round + 1,
+        fixed_by=state.fixed_by + jnp.stack(rule_counts))
+
+
+def _cond(state: SSSPState, max_rounds: int):
+    active = (state.D < INF) & ~state.fixed
+    pending = state.fixed & ~state.explored  # fixed but not yet relaxed
+    return (jnp.any(active) | jnp.any(pending)) & (state.round < max_rounds)
+
+
+# jit with the graph as a traced pytree (weights/topology can change without
+# recompiling as long as n/e_pad match) but cfg/source static.
+@partial(jax.jit, static_argnames=("cfg", "source"))
+def _run_traced_graph(g: Graph, cfg: SSSPConfig, source: int) -> SSSPState:
+    state = _init_state(g, source)
+    max_rounds = cfg.max_rounds or g.n + 2
+    return jax.lax.while_loop(
+        lambda s: _cond(s, max_rounds), partial(_round, g, cfg), state)
+
+
+def run_sssp(g: Graph, source: int = 0,
+             cfg: SSSPConfig = SP4_CONFIG) -> SSSPResult:
+    """Run the engine under jit (lax.while_loop)."""
+    state = _run_traced_graph(g, cfg, source)
+    fb = np.asarray(state.fixed_by)
+    return SSSPResult(
+        dist=state.D, C=state.C, fixed=state.fixed,
+        rounds=int(state.round),
+        fixed_by={r: int(c) for r, c in zip(_RULE_ORDER, fb)})
+
+
+def run_sssp_ell(g: Graph, ell, source: int = 0,
+                 cfg: SSSPConfig = SP4_CONFIG) -> SSSPResult:
+    """Engine rounds computed on the dense ELL layout via kernels/ops.
+
+    Every per-round reduction is one call of the fused relax kernel
+    (min over in-edges of x[src]+w, masked):
+      D_relax  = relax(D, mask=relax_src)
+      inW_nf   = relax(0, mask=~fixed)        (x=0 -> plain min weight)
+      c_in     = relax(C, mask=all)
+      pred     = via masked weight min == inf (no non-fixed in-edge)
+    Used by the Pallas integration tests and the TPU deployment path
+    (cfg.use_pallas=True); falls back to the jnp oracle otherwise.
+    """
+    from repro.kernels import ops
+
+    up = cfg.use_pallas
+    n = g.n
+    zeros = jnp.zeros((n,), jnp.float32)
+    ones_mask = jnp.ones((n,), bool)
+
+    def seg_min_like(D_vals, mask):
+        return ops.relax_ell(D_vals, ell, mask, use_pallas=up)
+
+    state = _init_state(g, source)
+    max_rounds = cfg.max_rounds or g.n + 2
+
+    def round_fn(state: SSSPState) -> SSSPState:
+        D, C, fixed = state.D, state.C, state.fixed
+        relax_src = (D < INF) if cfg.label_correcting else fixed
+        D_relax = seg_min_like(D, relax_src)
+        D = jnp.where(~fixed, jnp.minimum(D, D_relax), D)
+        explored = fixed
+        discovered = D < INF
+        active = discovered & ~fixed
+        minD = ops.masked_min(D, active, use_pallas=up)
+        new_fix = jnp.zeros_like(fixed)
+        counts = []
+
+        def count(mask):
+            counts.append(jnp.sum(mask & active & ~new_fix, dtype=jnp.int32))
+            return mask
+
+        if "min" in cfg.rules:
+            new_fix = new_fix | count(active & (D <= minD))
+        else:
+            counts.append(jnp.int32(0))
+        in_w_nf = seg_min_like(zeros, ~fixed)
+        if "pred" in cfg.rules:
+            new_fix = new_fix | count(active & jnp.isinf(in_w_nf))
+        else:
+            counts.append(jnp.int32(0))
+        if "in" in cfg.rules:
+            new_fix = new_fix | count(active & (D <= minD + in_w_nf))
+        else:
+            counts.append(jnp.int32(0))
+        if "out" in cfg.rules:
+            threshold = ops.masked_min(D + g.out_weight, active,
+                                       use_pallas=up)
+            new_fix = new_fix | count(active & (D <= threshold))
+        else:
+            counts.append(jnp.int32(0))
+        fixed1 = fixed | new_fix
+        if "lb" in cfg.rules:
+            C = jnp.where(fixed1, D, jnp.maximum(C, minD))
+            for _ in range(cfg.c_prop_iters):
+                c_in = seg_min_like(C, ones_mask)
+                C = jnp.where(~fixed1, jnp.maximum(C, c_in), C)
+            fix_lb = ~fixed1 & discovered & (C >= D)
+            counts.append(jnp.sum(fix_lb, dtype=jnp.int32))
+            fixed2 = fixed1 | fix_lb
+            C = jnp.where(fixed2, D, C)
+        else:
+            counts.append(jnp.int32(0))
+            fixed2 = fixed1
+            C = jnp.where(fixed2, D, C)
+        return SSSPState(D=D, C=C, fixed=fixed2, explored=explored,
+                         round=state.round + 1,
+                         fixed_by=state.fixed_by + jnp.stack(counts))
+
+    while bool(np.asarray(_cond(state, max_rounds))):
+        state = round_fn(state)
+    return SSSPResult(
+        dist=state.D, C=state.C, fixed=state.fixed, rounds=int(state.round),
+        fixed_by={r: int(c) for r, c in
+                  zip(_RULE_ORDER, np.asarray(state.fixed_by))})
+
+
+def run_sssp_traced(g: Graph, source: int = 0,
+                    cfg: SSSPConfig = SP4_CONFIG,
+                    max_rounds: int | None = None) -> SSSPResult:
+    """Eager (python-loop) execution recording a per-round trace.
+
+    The trace is the benchmark harness's data source: per-round counts of
+    vertices fixed by each rule, minD, and invariant checks (C <= cost <= D,
+    monotonicity) are asserted by the property tests.
+    """
+    state = _init_state(g, source)
+    limit = max_rounds or cfg.max_rounds or g.n + 1
+    trace = []
+    round_fn = jax.jit(partial(_round, g, cfg))
+    prev_fb = np.zeros(5, np.int64)
+    while bool(np.asarray(_cond(state, limit))):
+        prev_D = np.asarray(state.D)
+        prev_C = np.asarray(state.C)
+        state = round_fn(state)
+        fb = np.asarray(state.fixed_by, np.int64)
+        trace.append(dict(
+            round=int(state.round),
+            n_fixed=int(np.asarray(jnp.sum(state.fixed))),
+            fixed_by_round={r: int(c) for r, c in
+                            zip(_RULE_ORDER, fb - prev_fb)},
+            minD=float(np.min(np.where(~np.asarray(state.fixed)
+                                       & (prev_D < np.inf), prev_D, np.inf),
+                              initial=np.inf)),
+            D=np.asarray(state.D).copy(),
+            C=np.asarray(state.C).copy(),
+            prev_D=prev_D, prev_C=prev_C,
+        ))
+        prev_fb = fb
+    return SSSPResult(
+        dist=state.D, C=state.C, fixed=state.fixed, rounds=int(state.round),
+        fixed_by={r: int(c) for r, c in
+                  zip(_RULE_ORDER, np.asarray(state.fixed_by))},
+        trace=trace)

@@ -1,0 +1,44 @@
+"""Shortest-path-tree extraction via backward parent pointers.
+
+The paper computes costs only, noting "the standard method of keeping
+backward parent pointers is applicable to all of our algorithms" — this
+module is that standard method, vectorized: an edge (u,v) is a tree edge
+iff D[u] + w == D[v]; each vertex keeps the smallest-index such parent.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.graph import Graph, INF
+
+
+@jax.jit
+def parent_pointers(g: Graph, D: jax.Array, *, atol: float = 1e-5):
+    """int32[n] parent vertex per node (-1 for source/unreachable)."""
+    Dsrc = g.gather_src(D)
+    Ddst = g.gather_dst(D)
+    feasible = (Dsrc < INF) & (jnp.abs(Dsrc + g.w - Ddst) <= atol * (1 + Ddst))
+    key = jnp.where(feasible, g.src, g.n + 1).astype(jnp.int32)
+    best = jax.ops.segment_min(
+        key, g.dst, num_segments=g.n + 1, indices_are_sorted=True)[: g.n]
+    parent = jnp.where(best <= g.n, best, -1)
+    parent = jnp.where(D < INF, parent, -1)
+    return parent.astype(jnp.int32)
+
+
+def extract_path(parent: np.ndarray, target: int, source: int = 0):
+    """Host-side path walk (list of vertices source..target), or None."""
+    parent = np.asarray(parent)
+    path = [target]
+    seen = set()
+    v = target
+    while v != source:
+        p = int(parent[v])
+        if p < 0 or p in seen:
+            return None
+        seen.add(p)
+        path.append(p)
+        v = p
+    return path[::-1]

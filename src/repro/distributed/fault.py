@@ -1,0 +1,104 @@
+"""Fault tolerance & straggler mitigation (host-side runbook + hooks).
+
+At 1000+ nodes the failure model is: (a) hard node loss (process exits,
+collective times out), (b) stragglers (slow host stretches every
+bulk-synchronous step), (c) data-pipeline stalls.  The framework's
+answers, each wired into runtime/train_loop.py:
+
+  1. CHECKPOINT/RESTART — CheckpointManager writes async every
+     `ckpt_every` steps (atomic rename; keep-last-k).  `--resume auto`
+     restores the latest complete checkpoint.  Checkpoints are
+     unsharded-logical, so restart may use a DIFFERENT mesh (elastic
+     shrink: drop the dead host's slice, re-lower, continue — the
+     dry-run proves re-lowering on other mesh shapes compiles).
+  2. STEP WATCHDOG — StepWatchdog wraps the blocking device-get of each
+     step; if a step exceeds `timeout_s` (collective hang = dead peer),
+     the launcher kills and restarts from the last checkpoint.
+  3. STRAGGLER DETECTION — detect_stragglers() flags hosts whose step
+     times are z-score outliers; the launcher blacklists them on the
+     next restart (shrunk data axis).  Bulk-synchronous steps +
+     deterministic data sharding make host removal a pure re-mesh.
+"""
+from __future__ import annotations
+
+import threading
+import time
+
+import numpy as np
+
+
+class StepTimeout(RuntimeError):
+    pass
+
+
+class StepWatchdog:
+    """Context manager that raises StepTimeout if the step wedges."""
+
+    def __init__(self, timeout_s: float = 300.0):
+        self.timeout_s = timeout_s
+        self._timer: threading.Timer | None = None
+        self.fired = False
+
+    def _fire(self):
+        self.fired = True
+
+    def __enter__(self):
+        self._timer = threading.Timer(self.timeout_s, self._fire)
+        self._timer.daemon = True
+        self._timer.start()
+        return self
+
+    def __exit__(self, *exc):
+        self._timer.cancel()
+        if self.fired and exc[0] is None:
+            raise StepTimeout(
+                f"step exceeded {self.timeout_s}s — likely a hung "
+                "collective; restart from last checkpoint")
+        return False
+
+
+def detect_stragglers(step_times: dict[str, list[float]],
+                      z_threshold: float = 3.0,
+                      min_steps: int = 5) -> list[str]:
+    """hosts whose mean step time is a z-score outlier vs the fleet."""
+    hosts = [h for h, t in step_times.items() if len(t) >= min_steps]
+    if len(hosts) < 3:
+        return []
+    means = np.array([np.mean(step_times[h]) for h in hosts])
+    mu, sd = np.mean(means), np.std(means) + 1e-9
+    return [h for h, m in zip(hosts, means) if (m - mu) / sd > z_threshold]
+
+
+def elastic_data_axis(n_hosts_alive: int, chips_per_host: int,
+                      model_parallel: int) -> tuple[int, int]:
+    """Largest (data, model) mesh that fits the surviving hosts.
+
+    model_parallel is fixed by the checkpointed layout; the data axis
+    shrinks to what remains (batch is re-split deterministically)."""
+    total = n_hosts_alive * chips_per_host
+    data = total // model_parallel
+    if data == 0:
+        raise RuntimeError("not enough chips for the model-parallel group")
+    return data, model_parallel
+
+
+class StepTimer:
+    """Per-host rolling step timer feeding detect_stragglers."""
+
+    def __init__(self, window: int = 50):
+        self.window = window
+        self.times: list[float] = []
+        self._t0: float | None = None
+
+    def start(self):
+        self._t0 = time.perf_counter()
+
+    def stop(self):
+        if self._t0 is not None:
+            self.times.append(time.perf_counter() - self._t0)
+            self.times = self.times[-self.window:]
+            self._t0 = None
+
+    @property
+    def mean(self) -> float:
+        return float(np.mean(self.times)) if self.times else 0.0

@@ -1,0 +1,33 @@
+"""Mesh axis conventions.
+
+Production meshes (launch/mesh.py builds them):
+  single-pod : (16, 16)      axes ("data", "model")   = 256 chips
+  multi-pod  : (2, 16, 16)   axes ("pod", "data", "model") = 512 chips
+
+Conventions used by every sharding rule:
+  * DATA_AXES — the batch/data-parallel axes: ("pod", "data") when a pod
+    axis exists, else ("data",).  Batch dims shard over ALL of them.
+  * "model" — tensor/expert/table parallelism.  pods never split a
+    tensor: cross-pod traffic (DCI) is only gradient all-reduce over
+    the pod axis, which overlaps with backward compute.
+"""
+from __future__ import annotations
+
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+def data_axes(mesh: Mesh) -> tuple[str, ...]:
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+def dp_size(mesh: Mesh) -> int:
+    return int(np.prod([mesh.shape[a] for a in data_axes(mesh)]))
+
+
+def model_size(mesh: Mesh) -> int:
+    return int(mesh.shape.get("model", 1))
+
+
+def named(mesh: Mesh, *spec) -> NamedSharding:
+    return NamedSharding(mesh, P(*spec))

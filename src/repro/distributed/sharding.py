@@ -1,0 +1,226 @@
+"""Per-architecture PartitionSpec rules (DP/TP/EP/SP).
+
+One function per family maps a parameter pytree (by path) and the input
+batch to PartitionSpecs on the production mesh.  These rules are what
+the multi-pod dry-run exercises for every (arch x shape) cell.
+
+LM rules (megatron-style):
+  embed [V,d]           -> (model, None)        vocab-sharded
+  wq/wk/wv [L,d,Hhd]    -> (None, None, model)  column TP
+  wo [L,Hhd,d]          -> (None, model, None)  row TP
+  FFN gate/up | down    -> column | row TP
+  MoE expert weights    -> (None, model, ...)   EP over experts
+  lm_head [d,V]         -> (None, model)
+  batch tokens [B,S]    -> (DATA, None)
+  activations [B,S,d]   -> (DATA, None, None)
+  MoE dispatch buffer   -> (DATA, model, None, None)  (the all-to-all)
+  KV cache [B,S,H,hd]   -> (DATA, model, None, None)  decode: cache-seq
+                           sharded over model => flash-decode partials
+                           + a small softmax all-reduce per layer.
+
+GNN full-graph: edges over DATA (the distributed SSSP layout), node
+features replicated at 2.7M nodes x small d (fits), TP over feature dim
+only for ogb_products' 100-dim features -> (None, model).
+
+RecSys: table rows over model (table parallelism: lookups become
+all-to-all-ish gathers), dense MLP data-parallel, batch over DATA.
+"""
+from __future__ import annotations
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.distributed.mesh import data_axes
+from repro.models.transformer import ShardingHooks
+
+
+def _path_str(path) -> str:
+    parts = []
+    for p in path:
+        if hasattr(p, "key"):
+            parts.append(str(p.key))
+        elif hasattr(p, "idx"):
+            parts.append(str(p.idx))
+    return "/".join(parts)
+
+
+def _axis_size(mesh: Mesh, entry) -> int:
+    if entry is None:
+        return 1
+    if isinstance(entry, (tuple, list)):
+        out = 1
+        for a in entry:
+            out *= mesh.shape[a]
+        return out
+    return mesh.shape[entry]
+
+
+def safe_P(mesh: Mesh, shape: tuple[int, ...], spec: P) -> P:
+    """Drop spec axes on dims they don't divide (e.g. batch=1 decode)."""
+    entries = list(spec) + [None] * (len(shape) - len(spec))
+    out = []
+    for dim, entry in zip(shape, entries):
+        out.append(entry if dim % _axis_size(mesh, entry) == 0 else None)
+    return P(*out)
+
+
+def _constrain(mesh, *spec):
+    def f(x):
+        p = safe_P(mesh, x.shape, P(*spec))
+        return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, p))
+    return f
+
+
+# ---------------------------------------------------------------------------
+# LM
+# ---------------------------------------------------------------------------
+
+def lm_param_spec(path, leaf, mesh: Mesh, cfg) -> P:
+    s = _path_str(path)
+    mdl = mesh.shape.get("model", 1)
+
+    def div(dim):  # only shard when divisible
+        return leaf.shape[dim] % mdl == 0
+
+    if s.startswith("embed"):
+        return P("model", None) if div(0) else P()
+    if s.startswith("lm_head"):
+        return P(None, "model") if div(1) else P()
+    if "wq" in s or "wk" in s or "wv" in s:
+        return P(None, None, "model") if div(2) else P()
+    if "wo" in s:
+        return P(None, "model", None) if div(1) else P()
+    if "w_gate" in s or "w_up" in s or "ws_gate" in s or "ws_up" in s:
+        return P(None, None, "model") if div(2) else P()
+    if "w_down" in s or "ws_down" in s:
+        return P(None, "model", None) if div(1) else P()
+    if "we_gate" in s or "we_up" in s or "we_down" in s:
+        # experts dim 1 of [L, E, d, f]
+        return P(None, "model", None, None) if div(1) else P()
+    return P()  # norms, router, scalars replicated
+
+
+def lm_batch_spec(mesh: Mesh) -> P:
+    return P(data_axes(mesh), None)
+
+
+def lm_hooks(mesh: Mesh, cfg, seq_parallel_attn: bool | None = None
+             ) -> ShardingHooks:
+    dp = data_axes(mesh)
+    mdl = mesh.shape.get("model", 1)
+    hooks = ShardingHooks(
+        act=_constrain(mesh, dp, None, None),
+        moe_buf=_constrain(mesh, dp, "model", None, None),
+        logits=_constrain(mesh, dp, None, "model"),
+        cache=_constrain(mesh, dp, "model", None, None),
+    )
+    # Sequence-parallel attention when query heads don't divide the
+    # model axis (llama4's 40 heads on 16-way TP): shard S over `model`
+    # for q, replicate K/V — one K/V all-gather per layer instead of
+    # XLA's fallback of replicating whole [B,S,d] activations.
+    if seq_parallel_attn is None:
+        seq_parallel_attn = (cfg.n_heads % mdl != 0)
+    if seq_parallel_attn:
+        hooks.attn_q = _constrain(mesh, dp, "model", None, None, None)
+        hooks.attn_kv = _constrain(mesh, dp, None, None, None)
+        # Megatron-SP: keep the residual stream sequence-sharded too —
+        # norms/elementwise run on S/model shards; only MoE dispatch and
+        # K/V gathers cross the boundary.
+        hooks.act = _constrain(mesh, dp, "model", None)
+    return hooks
+
+
+def lm_cache_spec(mesh: Mesh) -> P:
+    """KV cache [B, S_cache, Hkv, hd]: batch over DATA, seq over model."""
+    return P(data_axes(mesh), "model", None, None)
+
+
+# ---------------------------------------------------------------------------
+# GNN
+# ---------------------------------------------------------------------------
+
+def gnn_batch_specs(mesh: Mesh, feature_model_shard: bool = False) -> dict:
+    dp = data_axes(mesh)
+    return {
+        "x": P(None, "model") if feature_model_shard else P(),
+        "src": P(dp),
+        "dst": P(dp),
+        "node_mask": P(),
+        "graph_id": P(),
+        "pos": P(),
+        "y": P(),
+    }
+
+
+def gnn_param_spec(path, leaf, mesh: Mesh) -> P:
+    # small GNN weights: replicate (node/edge data dwarfs them)
+    return P()
+
+
+# ---------------------------------------------------------------------------
+# RecSys
+# ---------------------------------------------------------------------------
+
+def recsys_param_spec(path, leaf, mesh: Mesh) -> P:
+    s = _path_str(path)
+    mdl = mesh.shape.get("model", 1)
+    if s.startswith("table") and leaf.shape[0] % mdl == 0:
+        return P("model", None)
+    if s.startswith("linear") and leaf.shape[0] % mdl == 0:
+        return P("model")
+    return P()
+
+
+def recsys_batch_spec(mesh: Mesh) -> dict:
+    dp = data_axes(mesh)
+    return {"indices": P(dp, None, None), "labels": P(dp)}
+
+
+# ---------------------------------------------------------------------------
+# generic helpers
+# ---------------------------------------------------------------------------
+
+def tree_shardings(tree, mesh: Mesh, spec_fn, *args):
+    """Map a (possibly abstract) pytree to NamedShardings via spec_fn."""
+    flat = jax.tree_util.tree_flatten_with_path(tree)[0]
+    treedef = jax.tree_util.tree_structure(tree)
+    out = [NamedSharding(mesh, spec_fn(path, leaf, mesh, *args))
+           for path, leaf in flat]
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def zero1_spec(spec: P, shape: tuple[int, ...], mesh: Mesh) -> P:
+    """ZeRO-1: additionally shard an optimizer tensor over the DATA axes
+    on the first dimension they divide and the param spec leaves free.
+    (f32 m/v are 4x the bf16 params — without this the optimizer state
+    alone overflows a 16 GB chip for the big cells.)"""
+    dp = data_axes(mesh)
+    if not dp:
+        return spec
+    dp_size = 1
+    for a in dp:
+        dp_size *= mesh.shape[a]
+    entries = list(spec) + [None] * (len(shape) - len(spec))
+    for i, (dim, e) in enumerate(zip(shape, entries)):
+        if e is None and dim % dp_size == 0 and dim >= dp_size:
+            entries[i] = dp
+            return P(*entries)
+    return spec
+
+
+def opt_state_shardings(param_shardings, mesh: Mesh, params_abs=None,
+                        zero1: bool = True):
+    """Adam m/v mirror the parameter shardings (+ ZeRO-1 data-axis
+    sharding when abstract params are provided); step replicated."""
+    if zero1 and params_abs is not None:
+        mv = jax.tree.map(
+            lambda sh, p: NamedSharding(
+                mesh, zero1_spec(sh.spec, p.shape, mesh)),
+            param_shardings, params_abs)
+    else:
+        mv = param_shardings
+    return {
+        "m": mv,
+        "v": mv,
+        "step": NamedSharding(mesh, P()),
+    }

@@ -1,0 +1,102 @@
+"""Pallas TPU kernel: causal flash attention (online softmax).
+
+Used by the LM train cells: avoids materializing the [S, S] score matrix
+in HBM (at train_4k with per-device S=4096 the scores alone would be
+4096^2 * heads * batch * 4B per layer).  Standard two-level structure:
+
+  grid = (batch*kv_heads*q_per_kv, S_q / block_q); each step holds one
+  query block + the full K/V for that head in VMEM and runs the online
+  softmax over key blocks with a fori_loop.
+
+MXU alignment: block_q and block_k are multiples of 128; head_dim rides
+in lanes.  The pure-jnp flash (models/attention.py) is the production
+fallback; this kernel is the TPU hot path and is validated against
+ref.flash_attention_ref in interpret mode.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, *, scale: float,
+                  causal: bool, block_q: int, block_k: int, seq_k: int):
+    iq = pl.program_id(1)
+    q = q_ref[0].astype(jnp.float32) * scale        # [block_q, d]
+    m0 = jnp.full((block_q, 1), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((block_q, 1), jnp.float32)
+    acc0 = jnp.zeros((block_q, q.shape[-1]), jnp.float32)
+
+    q_pos = iq * block_q + jax.lax.broadcasted_iota(
+        jnp.int32, (block_q, 1), 0)
+
+    def body(jk, carry):
+        m, l, acc = carry
+        k = k_ref[0, pl.ds(jk * block_k, block_k), :].astype(jnp.float32)
+        v = v_ref[0, pl.ds(jk * block_k, block_k), :].astype(jnp.float32)
+        s = jax.lax.dot_general(                     # [block_q, block_k]
+            q, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        if causal:
+            k_pos = jk * block_k + jax.lax.broadcasted_iota(
+                jnp.int32, (1, block_k), 1)
+            s = jnp.where(q_pos >= k_pos, s, NEG_INF)
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        alpha = jnp.exp(m - m_new)
+        l_new = l * alpha + jnp.sum(p, axis=-1, keepdims=True)
+        acc_new = acc * alpha + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        return m_new, l_new, acc_new
+
+    if causal:
+        # skip key blocks entirely above the diagonal:
+        # ceil((iq+1)*block_q / block_k), clamped to the full count
+        n_blocks = jnp.minimum(
+            ((iq + 1) * block_q + block_k - 1) // block_k,
+            seq_k // block_k)
+    else:
+        n_blocks = seq_k // block_k
+    m, l, acc = jax.lax.fori_loop(0, n_blocks, body, (m0, l0, acc0))
+    o_ref[0] = (acc / jnp.maximum(l, 1e-30)).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "causal", "block_q", "block_k", "interpret"))
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                    causal: bool = True, block_q: int = 128,
+                    block_k: int = 128, interpret: bool = True):
+    """[B, H, S, d] attention; K/V may have fewer heads only if pre-tiled.
+
+    GQA callers broadcast K/V to H query heads before the call (the
+    models do this with a reshape view, not a copy, via einsum grouping).
+    """
+    B, H, Sq, d = q.shape
+    Sk = k.shape[2]
+    assert Sq % block_q == 0 and Sk % block_k == 0
+    scale = 1.0 / (d ** 0.5)
+    bh = B * H
+    qr = q.reshape(bh, Sq, d)
+    kr = k.reshape(bh, Sk, d)
+    vr = v.reshape(bh, Sk, d)
+    out = pl.pallas_call(
+        functools.partial(
+            _flash_kernel, scale=scale, causal=causal,
+            block_q=block_q, block_k=block_k, seq_k=Sk),
+        grid=(bh, Sq // block_q),
+        in_specs=[
+            pl.BlockSpec((1, block_q, d), lambda b, i: (b, i, 0)),
+            pl.BlockSpec((1, Sk, d), lambda b, i: (b, 0, 0)),
+            pl.BlockSpec((1, Sk, d), lambda b, i: (b, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_q, d), lambda b, i: (b, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((bh, Sq, d), q.dtype),
+        interpret=interpret,
+    )(qr, kr, vr)
+    return out.reshape(B, H, Sq, d)

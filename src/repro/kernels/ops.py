@@ -1,0 +1,75 @@
+"""jit'd dispatch wrappers: Pallas kernel vs pure-jnp reference.
+
+On this CPU container the kernels always run in interpret mode (the
+kernel body executes in Python op-by-op) — correct but slow, so the
+*default* execution path everywhere is the jnp reference, and the Pallas
+path is selected explicitly (tests, TPU deployments via
+``REPRO_USE_PALLAS=1`` or config flags).
+"""
+from __future__ import annotations
+
+import os
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.graph import EllGraph
+from repro.kernels import ref
+from repro.kernels.relax import relax_ell as _relax_pallas
+from repro.kernels.segment_min import masked_min as _masked_min_pallas
+from repro.kernels.cin import cin_layer as _cin_pallas
+from repro.kernels.flash_attn import flash_attention as _flash_pallas
+
+
+def _use_pallas(flag: bool | None) -> bool:
+    if flag is not None:
+        return flag
+    return os.environ.get("REPRO_USE_PALLAS", "0") == "1"
+
+
+def relax_ell(D: jax.Array, ell: EllGraph, src_mask: jax.Array,
+              *, use_pallas: bool | None = None) -> jax.Array:
+    """Candidate D' per vertex: min over in-edges of D[src]+w (masked).
+
+    D: float32[n]; src_mask: bool[n] (which sources may relax).
+    Returns float32[n] (ELL padding rows dropped).
+    """
+    D_ext = jnp.concatenate([D, jnp.array([jnp.inf], D.dtype)])
+    m_ext = jnp.concatenate([src_mask, jnp.array([False])])
+    d_src = D_ext[ell.in_src]          # [n_pad, deg_pad] XLA gather
+    mask = m_ext[ell.in_src]
+    if _use_pallas(use_pallas):
+        out = _relax_pallas(d_src, ell.in_w, mask)
+    else:
+        out = ref.relax_ell_ref(d_src, ell.in_w, mask)
+    return out[: ell.n]
+
+
+def masked_min(x: jax.Array, mask: jax.Array,
+               *, use_pallas: bool | None = None) -> jax.Array:
+    if _use_pallas(use_pallas):
+        return _masked_min_pallas(x, mask)
+    return ref.masked_min_ref(x, mask)
+
+
+def cin_layer(x_k: jax.Array, x_0: jax.Array, w: jax.Array,
+              *, use_pallas: bool | None = None) -> jax.Array:
+    if _use_pallas(use_pallas):
+        B = x_k.shape[0]
+        bb = 32
+        pad = (-B) % bb
+        if pad:
+            x_k = jnp.concatenate(
+                [x_k, jnp.zeros((pad,) + x_k.shape[1:], x_k.dtype)])
+            x_0 = jnp.concatenate(
+                [x_0, jnp.zeros((pad,) + x_0.shape[1:], x_0.dtype)])
+        out = _cin_pallas(x_k, x_0, w, block_b=bb)
+        return out[:B]
+    return ref.cin_layer_ref(x_k, x_0, w)
+
+
+def flash_attention(q, k, v, *, causal: bool = True,
+                    use_pallas: bool | None = None):
+    if _use_pallas(use_pallas):
+        return _flash_pallas(q, k, v, causal=causal)
+    return ref.flash_attention_ref(q, k, v, causal=causal)

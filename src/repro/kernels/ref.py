@@ -1,0 +1,56 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose targets).
+
+Each function is the mathematical definition with no tiling/blocking —
+tests sweep shapes × dtypes and assert the Pallas kernels (interpret=True
+on CPU) match these bit-for-bit (exact for min/mask ops, allclose for
+matmul-bearing ops).
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def relax_ell_ref(d_src: jnp.ndarray, w: jnp.ndarray,
+                  mask: jnp.ndarray) -> jnp.ndarray:
+    """Row-wise masked min of (d_src + w): float32[n, deg] -> float32[n].
+
+    d_src[i, j] = D at the j-th in-neighbour of vertex i (INF padding),
+    w[i, j]     = weight of that in-edge (INF padding),
+    mask[i, j]  = whether the edge participates this round.
+    """
+    cand = jnp.where(mask, d_src + w, jnp.inf)
+    return jnp.min(cand, axis=-1)
+
+
+def masked_min_ref(x: jnp.ndarray, mask: jnp.ndarray) -> jnp.ndarray:
+    """Global min over masked elements -> float32 scalar (INF if none)."""
+    return jnp.min(jnp.where(mask, x, jnp.inf))
+
+
+def cin_layer_ref(x_k: jnp.ndarray, x_0: jnp.ndarray,
+                  w: jnp.ndarray) -> jnp.ndarray:
+    """xDeepFM CIN layer.
+
+    x_k: [B, H_k, D]   current feature map
+    x_0: [B, M, D]     field embeddings
+    w:   [H_next, H_k, M]
+    out: [B, H_next, D] = sum_{h,m} w[h',h,m] * x_k[:,h,:] * x_0[:,m,:]
+    """
+    z = jnp.einsum("bhd,bmd->bhmd", x_k, x_0)
+    return jnp.einsum("khm,bhmd->bkd", w, z)
+
+
+def flash_attention_ref(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                        *, causal: bool = True,
+                        scale: float | None = None) -> jnp.ndarray:
+    """Plain softmax attention, [B, H, S, d] layout, full materialization."""
+    d = q.shape[-1]
+    scale = scale if scale is not None else 1.0 / (d ** 0.5)
+    logits = jnp.einsum("bhqd,bhkd->bhqk", q, k) * scale
+    if causal:
+        s_q, s_k = q.shape[2], k.shape[2]
+        mask = jnp.tril(jnp.ones((s_q, s_k), bool), k=s_k - s_q)
+        logits = jnp.where(mask, logits, -jnp.inf)
+    probs = jnp.exp(logits - jnp.max(logits, axis=-1, keepdims=True))
+    probs = probs / jnp.sum(probs, axis=-1, keepdims=True)
+    return jnp.einsum("bhqk,bhkd->bhqd", probs, v).astype(q.dtype)

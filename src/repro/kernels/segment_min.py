@@ -1,0 +1,57 @@
+"""Pallas TPU kernel: masked global min (the engine's minD / threshold).
+
+The sequential algorithms read these off heap roots; the PRAM version
+(SP4 Step 1) uses a doubly-logarithmic reduction tree.  On TPU the VPU
+gives us a lane-parallel min; the sequential grid accumulates the
+running scalar across blocks in VMEM (grid steps are ordered on TPU).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_BLOCK = 4096
+
+
+def _masked_min_kernel(x_ref, m_ref, out_ref):
+    i = pl.program_id(0)
+    blk = jnp.min(jnp.where(m_ref[...], x_ref[...], jnp.inf))
+
+    @pl.when(i == 0)
+    def _init():
+        out_ref[0, 0] = blk
+
+    @pl.when(i > 0)
+    def _acc():
+        out_ref[0, 0] = jnp.minimum(out_ref[0, 0], blk)
+
+
+@functools.partial(jax.jit, static_argnames=("block", "interpret"))
+def masked_min(x: jax.Array, mask: jax.Array, *,
+               block: int = DEFAULT_BLOCK, interpret: bool = True):
+    """min over x[mask] -> float32 scalar (+inf when mask empty).
+
+    x, mask are 1-D; the wrapper lifts them to the (1, n) lane layout and
+    pads to a block multiple with +inf/False.
+    """
+    n = x.shape[0]
+    block = min(block, max(128, n))
+    n_pad = (n + block - 1) // block * block
+    if n_pad != n:
+        x = jnp.concatenate([x, jnp.full((n_pad - n,), jnp.inf, x.dtype)])
+        mask = jnp.concatenate([mask, jnp.zeros((n_pad - n,), bool)])
+    out = pl.pallas_call(
+        _masked_min_kernel,
+        grid=(n_pad // block,),
+        in_specs=[
+            pl.BlockSpec((1, block), lambda i: (0, i)),
+            pl.BlockSpec((1, block), lambda i: (0, i)),
+        ],
+        out_specs=pl.BlockSpec((1, 1), lambda i: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((1, 1), jnp.float32),
+        interpret=interpret,
+    )(x[None, :].astype(jnp.float32), mask[None, :])
+    return out[0, 0]

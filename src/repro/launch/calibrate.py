@@ -1,0 +1,53 @@
+"""Two-point unrolled calibration for scan-over-layers LM cells.
+
+XLA's cost analysis counts a while-loop body once, so an L-layer scan
+under-reports flops/bytes/collectives by ~L x.  For each LM (shape x
+mesh) we compile the SAME architecture at depth 2 and depth 4 with all
+scans fully unrolled (layers AND flash-attention KV blocks), giving
+
+    per_layer = (X(4) - X(2)) / 2        exactly, for X in
+    nonscan   = X(2) - 2 * per_layer     {flops, bytes, coll_bytes}
+    total(L)  = nonscan + L * per_layer
+
+The unrolled depth-2/4 compiles are cheap (the full-width layer body is
+identical to production; only the trip count differs).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+from repro.launch.roofline import cost_dict, parse_collective_bytes
+
+
+def _measure(cfg, shape_name: str, arch: str, mesh) -> dict:
+    from repro.configs.cells import lm_cell
+    cell = lm_cell(cfg, shape_name, arch)
+    with mesh:
+        compiled = cell.lower(mesh).compile()
+    cost = cost_dict(compiled)
+    text = compiled.as_text()
+    return {
+        "flops": float(cost.get("flops", 0.0)),
+        "bytes": float(cost.get("bytes accessed", 0.0)),
+        "coll": float(parse_collective_bytes(text)["total"]),
+    }
+
+
+def lm_calibration(full_cfg, shape_name: str, arch: str, mesh) -> dict:
+    """Returns corrected per-chip totals {flops, bytes, coll} for the
+    full-depth model, plus the raw two-point data."""
+    cfg2 = dataclasses.replace(full_cfg, n_layers=2, scan_unroll=True)
+    cfg4 = dataclasses.replace(full_cfg, n_layers=4, scan_unroll=True)
+    m2 = _measure(cfg2, shape_name, arch, mesh)
+    m4 = _measure(cfg4, shape_name, arch, mesh)
+    L = full_cfg.n_layers
+    out = {}
+    for k in ("flops", "bytes", "coll"):
+        per_layer = max((m4[k] - m2[k]) / 2.0, 0.0)
+        nonscan = max(m2[k] - 2 * per_layer, 0.0)
+        out[k] = nonscan + L * per_layer
+        out[k + "_per_layer"] = per_layer
+        out[k + "_nonscan"] = nonscan
+    out["depth2"] = m2
+    out["depth4"] = m4
+    return out

@@ -1,0 +1,142 @@
+import os
+os.environ["XLA_FLAGS"] = os.environ.get(
+    "XLA_FLAGS", "") + " --xla_force_host_platform_device_count=512"
+# ^ MUST precede every other import (jax locks device count on first init).
+
+__doc__ = """Multi-pod dry-run driver (deliverable e).
+
+For every (architecture x input shape) cell and both production meshes:
+
+    lowered  = jit(step, in_shardings=...).lower(**input_specs)
+    compiled = lowered.compile()
+    print(compiled.memory_analysis())     # proves it fits
+    print(compiled.cost_analysis())       # FLOPs/bytes for §Roofline
+
+plus collective-byte parsing of the post-SPMD HLO and the three
+roofline terms.  Results land in experiments/dryrun/<cell>.json and are
+aggregated into EXPERIMENTS.md by launch/report.py.
+
+Usage:
+  python -m repro.launch.dryrun --arch qwen3-32b --shape train_4k
+  python -m repro.launch.dryrun --all --mesh both
+  python -m repro.launch.dryrun --arch sssp --shape sssp_web_64m
+"""
+
+import argparse
+import json
+import time
+import traceback
+
+
+def run_cell(arch_name: str, shape: str, multi_pod: bool,
+             out_dir: str, verbose: bool = True,
+             calibrate: bool = True) -> dict:
+    import jax
+    from repro.configs import get_arch
+    from repro.launch.mesh import make_production_mesh
+    from repro.launch.roofline import terms_from_compiled
+
+    spec = get_arch(arch_name)
+    cell = spec.build_cell(spec.full, shape)
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    n_chips = mesh.size
+    mesh_name = "multi" if multi_pod else "single"
+    tag = f"{arch_name}__{shape}__{mesh_name}"
+    rec: dict = {"arch": arch_name, "shape": shape, "mesh": mesh_name,
+                 "chips": n_chips, "kind": cell.kind}
+    t0 = time.time()
+    try:
+        with mesh:
+            lowered = cell.lower(mesh)
+            rec["lower_s"] = round(time.time() - t0, 1)
+            t1 = time.time()
+            compiled = lowered.compile()
+            rec["compile_s"] = round(time.time() - t1, 1)
+            mem = compiled.memory_analysis()
+            if mem is not None:
+                for k in ("argument_size_in_bytes",
+                          "output_size_in_bytes",
+                          "temp_size_in_bytes",
+                          "generated_code_size_in_bytes"):
+                    v = getattr(mem, k, None)
+                    if v is not None:
+                        rec[k] = int(v)
+            hlo = compiled.as_text()
+        # scan-over-layers cells need the two-point unrolled calibration
+        # (while bodies are cost-counted once); decode/GNN/recsys loop
+        # layers in python — exact already.
+        cal = None
+        if (calibrate and spec.kind == "lm"
+                and cell.kind in ("train", "prefill")):
+            from repro.launch.calibrate import lm_calibration
+            cal = lm_calibration(spec.full, shape, arch_name, mesh)
+            rec["calibration"] = {
+                k: cal[k] for k in
+                ("flops", "bytes", "coll", "flops_per_layer",
+                 "flops_nonscan")}
+        terms = terms_from_compiled(
+            compiled, n_chips, model_flops=cell.model_flops,
+            hlo_text=hlo, calibration=cal)
+        rec["roofline"] = terms.to_dict()
+        rec["hlo_bytes"] = len(hlo)
+        rec["status"] = "ok"
+        if verbose:
+            r = rec["roofline"]
+            print(f"[OK ] {tag:55s} compile {rec['compile_s']:6.1f}s "
+                  f"flops/chip {r['flops_per_chip']:.3e} "
+                  f"coll/chip {r['collective_bytes_per_chip']:.3e}B "
+                  f"-> {r['bottleneck']} "
+                  f"(frac {r['roofline_fraction']:.2f})")
+    except Exception as e:  # noqa: BLE001 — record and continue the sweep
+        rec["status"] = "fail"
+        rec["error"] = f"{type(e).__name__}: {e}"
+        rec["traceback"] = traceback.format_exc()[-2000:]
+        if verbose:
+            print(f"[FAIL] {tag}: {rec['error'][:200]}")
+    if out_dir:
+        os.makedirs(out_dir, exist_ok=True)
+        with open(os.path.join(out_dir, tag + ".json"), "w") as f:
+            json.dump(rec, f, indent=1, default=str)
+    return rec
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", choices=["single", "multi", "both"],
+                    default="both")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", default="experiments/dryrun")
+    args = ap.parse_args()
+
+    from repro.configs import get_arch, list_archs
+
+    cells: list[tuple[str, str]] = []
+    if args.all:
+        for a in list_archs():
+            for s in get_arch(a).shapes:
+                cells.append((a, s))
+    else:
+        assert args.arch, "--arch or --all required"
+        spec = get_arch(args.arch)
+        shapes = [args.shape] if args.shape else list(spec.shapes)
+        cells = [(args.arch, s) for s in shapes]
+
+    meshes = {"single": [False], "multi": [True],
+              "both": [False, True]}[args.mesh]
+    n_ok = n_fail = 0
+    for arch, shape in cells:
+        for mp in meshes:
+            rec = run_cell(arch, shape, mp, args.out)
+            if rec["status"] == "ok":
+                n_ok += 1
+            else:
+                n_fail += 1
+    print(f"\ndry-run: {n_ok} ok, {n_fail} failed")
+    if n_fail:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

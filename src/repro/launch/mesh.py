@@ -1,0 +1,21 @@
+"""Production mesh builders (functions, never module-level constants —
+importing this module must not touch jax device state)."""
+from __future__ import annotations
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    import jax
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh(model: int = 1):
+    """Whatever this host actually has (tests / examples)."""
+    import jax
+    import numpy as np
+    devs = jax.devices()
+    data = len(devs) // model
+    return jax.sharding.Mesh(
+        np.asarray(devs[: data * model]).reshape(data, model),
+        ("data", "model"))

@@ -1,0 +1,76 @@
+"""Training launcher: ``python -m repro.launch.train --arch <id> ...``
+
+On this CPU host it runs the smoke config end-to-end (data -> loss ->
+AdamW -> checkpoints, with --resume auto restart).  On a real cluster
+the same entrypoint runs the full config on the production mesh —
+everything mesh-dependent routes through distributed/sharding.py.
+"""
+from __future__ import annotations
+
+import argparse
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--lr", type=float, default=1e-3)
+    ap.add_argument("--grad-accum", type=int, default=1)
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--resume", choices=["auto", "none"], default="none")
+    ap.add_argument("--full", action="store_true",
+                    help="use the full config (cluster only)")
+    args = ap.parse_args()
+
+    import jax
+    from repro.configs import get_arch
+    from repro.runtime.train_loop import TrainConfig, Trainer
+
+    spec = get_arch(args.arch)
+    tcfg = TrainConfig(peak_lr=args.lr, warmup=max(args.steps // 10, 5),
+                       total_steps=args.steps, grad_accum=args.grad_accum,
+                       ckpt_dir=args.ckpt_dir, ckpt_every=args.ckpt_every)
+
+    if spec.kind == "lm":
+        from repro.data.synthetic import TokenStream
+        from repro.models import transformer as tfm
+        cfg = spec.full if args.full else spec.smoke
+        params = tfm.init_params(cfg, jax.random.PRNGKey(0))
+        stream = TokenStream(cfg.vocab, args.seq, args.batch)
+        trainer = Trainer(lambda p, b: tfm.loss_fn(p, b, cfg), params,
+                          tcfg, stream.next_batch, name=args.arch)
+    elif spec.kind == "recsys":
+        from repro.data.synthetic import RecsysStream
+        from repro.models import xdeepfm as xd
+        cfg = spec.full if args.full else spec.smoke
+        params = xd.init_params(cfg, jax.random.PRNGKey(0))
+        stream = RecsysStream(cfg.sizes(), cfg.offsets, args.batch)
+        trainer = Trainer(lambda p, b: xd.loss_fn(p, b, cfg), params,
+                          tcfg, stream.next_batch, name=args.arch)
+    elif spec.kind == "gnn":
+        import numpy as np
+        from repro.data.synthetic import cora_like
+        from repro.models.gnn import gat, layers as L
+        n, src, dst, x, y = cora_like(n=400, e=1600, d=64)
+        batch = L.build_batch(n, src, dst, x, y)
+        cfg = gat.GATConfig(in_dim=64, n_classes=7)
+        params = gat.init_params(cfg, jax.random.PRNGKey(0))
+        trainer = Trainer(
+            lambda p, b: gat.loss_fn(p, batch, cfg), params, tcfg,
+            lambda: {"_": np.zeros(1)}, name=args.arch)
+    else:
+        raise SystemExit(f"--arch {args.arch}: use examples/quickstart.py "
+                         "for the SSSP engine")
+
+    if args.resume == "auto":
+        step = trainer.maybe_resume()
+        print(f"resumed from step {step}")
+    trainer.run(args.steps)
+    print("done.")
+
+
+if __name__ == "__main__":
+    main()

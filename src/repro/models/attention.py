@@ -1,0 +1,123 @@
+"""Attention variants in pure JAX (flash-style, chunked-local, decode).
+
+All training attention is *online-softmax over KV blocks* (a lax.scan),
+so the [S, S] score matrix never materializes — peak activation per layer
+is [B, H, S, block_k].  GQA is handled by grouping query heads per KV
+head ([B, S, Hkv, q_per_kv, hd]) so K/V are never physically broadcast.
+
+`chunked_local` is the Llama-4-style sub-quadratic layer: tokens attend
+only within fixed chunks (no cross-chunk edges), giving O(S * chunk)
+work and a chunk-sized KV cache in decode — this is what makes the
+long_500k cell feasible (DESIGN.md §4).
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def flash_attention_gqa(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                        causal: bool = True, block_k: int = 2048,
+                        q_offset: int = 0,
+                        unroll: bool = False) -> jax.Array:
+    """Online-softmax attention.
+
+    q: [B, Sq, Hkv, G, hd]   (G = query heads per KV head)
+    k, v: [B, Sk, Hkv, hd]
+    returns [B, Sq, Hkv, G, hd]
+    """
+    B, Sq, Hkv, G, hd = q.shape
+    Sk = k.shape[1]
+    block_k = min(block_k, Sk)
+    assert Sk % block_k == 0, "pad KV to a block multiple"
+    n_blocks = Sk // block_k
+    scale = 1.0 / (hd ** 0.5)
+    qf = q * jnp.asarray(scale, q.dtype)   # keep input precision; the
+    q_pos = q_offset + jnp.arange(Sq)      # QK matmul accumulates in f32
+
+    kb = k.reshape(B, n_blocks, block_k, Hkv, hd).transpose(1, 0, 2, 3, 4)
+    vb = v.reshape(B, n_blocks, block_k, Hkv, hd).transpose(1, 0, 2, 3, 4)
+
+    def step(carry, blk):
+        m, l, acc = carry
+        kj, vj, j = blk
+        s = jnp.einsum("bqhgd,bkhd->bqhgk", qf, kj,
+                       preferred_element_type=jnp.float32)
+        if causal:
+            k_pos = j * block_k + jnp.arange(block_k)
+            mask = q_pos[:, None] >= k_pos[None, :]       # [Sq, block_k]
+            s = jnp.where(mask[None, :, None, None, :], s, NEG_INF)
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        alpha = jnp.exp(m - m_new)
+        l_new = l * alpha + jnp.sum(p, axis=-1)
+        # PV matmul in the input precision (f32 stays f32; bf16 models
+        # halve the dominant p-buffer traffic — acc stays f32)
+        acc_new = acc * alpha[..., None] + jnp.einsum(
+            "bqhgk,bkhd->bqhgd", p.astype(q.dtype), vj,
+            preferred_element_type=jnp.float32)
+        return (m_new, l_new, acc_new), None
+
+    m0 = jnp.full((B, Sq, Hkv, G), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((B, Sq, Hkv, G), jnp.float32)
+    acc0 = jnp.zeros((B, Sq, Hkv, G, hd), jnp.float32)
+    (m, l, acc), _ = jax.lax.scan(
+        step, (m0, l0, acc0), (kb, vb, jnp.arange(n_blocks)),
+        unroll=n_blocks if unroll else 1)
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    return out.astype(q.dtype)
+
+
+def chunked_local_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                            chunk: int, unroll: bool = False) -> jax.Array:
+    """Causal attention restricted to fixed chunks (Llama-4 local layers).
+
+    q: [B, S, Hkv, G, hd]; k, v: [B, S, Hkv, hd]; S % chunk == 0
+    (callers pad — at the assigned shapes S is always a chunk multiple).
+    """
+    B, S, Hkv, G, hd = q.shape
+    if S <= chunk:
+        return flash_attention_gqa(q, k, v, causal=True, unroll=unroll)
+    if S % chunk:
+        # pad to a chunk multiple; causal masking keeps padded keys
+        # invisible to real (earlier) queries within the final chunk
+        pad = chunk - S % chunk
+        qp = jnp.pad(q, ((0, 0), (0, pad), (0, 0), (0, 0), (0, 0)))
+        kp = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        vp = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        out = chunked_local_attention(qp, kp, vp, chunk=chunk,
+                                      unroll=unroll)
+        return out[:, :S]
+    n = S // chunk
+    qc = q.reshape(B, n, chunk, Hkv, G, hd)
+    kc = k.reshape(B, n, chunk, Hkv, hd)
+    vc = v.reshape(B, n, chunk, Hkv, hd)
+    out = jax.vmap(
+        lambda qq, kk, vv: flash_attention_gqa(qq, kk, vv, causal=True,
+                                               unroll=unroll),
+        in_axes=1, out_axes=1)(qc, kc, vc)
+    return out.reshape(B, S, Hkv, G, hd)
+
+
+def decode_attention(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
+                     length: jax.Array) -> jax.Array:
+    """Single-token attention over a KV cache.
+
+    q: [B, 1, Hkv, G, hd]; k_cache/v_cache: [B, S_max, Hkv, hd];
+    length: number of valid cache slots (scalar int32).
+    """
+    hd = q.shape[-1]
+    scale = 1.0 / (hd ** 0.5)
+    s = jnp.einsum("bqhgd,bkhd->bqhgk",
+                   q.astype(jnp.float32) * scale,
+                   k_cache.astype(jnp.float32))
+    S_max = k_cache.shape[1]
+    valid = jnp.arange(S_max) < length
+    s = jnp.where(valid[None, None, None, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bqhgk,bkhd->bqhgd", p, v_cache.astype(jnp.float32))
+    return out.astype(q.dtype)

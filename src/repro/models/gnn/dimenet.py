@@ -1,0 +1,214 @@
+"""DimeNet — directional message passing (arXiv:2003.03123).
+
+The load-bearing kernel regime is the TRIPLET GATHER: messages live on
+directed edges m_{j->i}, and each interaction block aggregates over
+triplets (k->j->i), combining a radial Bessel basis of |r_ji| with an
+angular basis of angle(k,j,i) through a bilinear tensor.
+
+Faithfulness note (DESIGN.md §Paper-faithfulness): the radial basis is
+the paper's spherical-Bessel  sqrt(2/c) sin(n pi r / c) / r  with the
+polynomial envelope; the angular basis uses a cosine-Fourier expansion
+cos(m * angle) instead of the spherical-harmonic-Bessel 2D basis (the
+j_l recurrences are numerically fragile without sympy-generated
+formulas).  The triplet machinery, bilinear contraction, block
+structure and counts (6 blocks, 128 hidden, 8 bilinear, 7 spherical,
+6 radial) match the paper config.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.gnn import layers as L
+
+
+@dataclasses.dataclass(frozen=True)
+class DimeNetConfig:
+    n_blocks: int = 6
+    d_hidden: int = 128
+    n_bilinear: int = 8
+    n_spherical: int = 7
+    n_radial: int = 6
+    cutoff: float = 5.0
+    n_species: int = 16
+    envelope_p: int = 6
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class TripletBatch:
+    """Edges + triplets of a molecular batch (host-built, padded)."""
+    n_nodes: int = dataclasses.field(metadata=dict(static=True))
+    n_edges: int = dataclasses.field(metadata=dict(static=True))
+    n_graphs: int = dataclasses.field(metadata=dict(static=True))
+    species: jax.Array    # int32[N_pad]
+    pos: jax.Array        # float32[N_pad, 3]
+    node_mask: jax.Array
+    graph_id: jax.Array   # int32[N_pad]
+    src: jax.Array        # int32[E_pad]  (edge j->i: src=j, dst=i)
+    dst: jax.Array
+    edge_mask: jax.Array
+    t_kj: jax.Array       # int32[T_pad] index of edge (k->j)
+    t_ji: jax.Array       # int32[T_pad] index of edge (j->i)
+    t_mask: jax.Array
+    y: jax.Array          # float32[n_graphs] energies
+
+
+def build_triplets(n: int, src, dst, pos, species, y, *, n_graphs=1,
+                   graph_id=None, e_pad_mult=128, t_pad_mult=256):
+    """Host-side: enumerate (k->j->i) pairs of edges sharing middle j."""
+    src = np.asarray(src, np.int64)
+    dst = np.asarray(dst, np.int64)
+    e = len(src)
+    in_edges = [[] for _ in range(n)]   # edges arriving at vertex
+    for eid, d in enumerate(dst):
+        in_edges[d].append(eid)
+    t_kj, t_ji = [], []
+    for eid in range(e):              # edge j->i
+        j, i = src[eid], dst[eid]
+        for kid in in_edges[j]:       # edge k->j
+            if src[kid] != i:         # exclude back-tracking k == i
+                t_kj.append(kid)
+                t_ji.append(eid)
+    t = len(t_kj)
+    e_pad = max(e_pad_mult, -(-e // e_pad_mult) * e_pad_mult)
+    t_pad = max(t_pad_mult, -(-max(t, 1) // t_pad_mult) * t_pad_mult)
+    n_pad = -(-n // 8) * 8
+
+    def pad(a, size, fill):
+        out = np.full(size, fill, np.int32)
+        out[: len(a)] = a
+        return out
+
+    pos_p = np.zeros((n_pad, 3), np.float32)
+    pos_p[:n] = pos
+    sp_p = pad(np.asarray(species), n_pad, 0)
+    nm = np.zeros(n_pad, bool)
+    nm[:n] = True
+    gid = pad(np.zeros(n, np.int64) if graph_id is None else graph_id,
+              n_pad, 0)
+    return TripletBatch(
+        n_nodes=n_pad, n_edges=e_pad, n_graphs=n_graphs,
+        species=jnp.asarray(sp_p), pos=jnp.asarray(pos_p),
+        node_mask=jnp.asarray(nm), graph_id=jnp.asarray(gid),
+        src=jnp.asarray(pad(src, e_pad, n_pad)),
+        dst=jnp.asarray(pad(dst, e_pad, n_pad)),
+        edge_mask=jnp.asarray(np.arange(e_pad) < e),
+        t_kj=jnp.asarray(pad(t_kj, t_pad, e_pad)),
+        t_ji=jnp.asarray(pad(t_ji, t_pad, e_pad)),
+        t_mask=jnp.asarray(np.arange(t_pad) < t),
+        y=jnp.asarray(np.asarray(y, np.float32).reshape(n_graphs)),
+    )
+
+
+def _envelope(r, cutoff, p):
+    """DimeNet polynomial envelope u(d) with u(cutoff)=0 smoothly."""
+    d = r / cutoff
+    a = -(p + 1) * (p + 2) / 2
+    b = p * (p + 2)
+    c = -p * (p + 1) / 2
+    u = 1 + a * d ** p + b * d ** (p + 1) + c * d ** (p + 2)
+    return jnp.where(d < 1, u, 0.0)
+
+
+def radial_basis(r, cfg: DimeNetConfig):
+    """[E] -> [E, n_radial] Bessel basis * envelope."""
+    n = jnp.arange(1, cfg.n_radial + 1, dtype=jnp.float32)
+    rr = jnp.maximum(r[:, None], 1e-6)
+    rbf = jnp.sqrt(2.0 / cfg.cutoff) * jnp.sin(
+        n * jnp.pi * rr / cfg.cutoff) / rr
+    return rbf * _envelope(rr, cfg.cutoff, cfg.envelope_p)
+
+
+def angular_basis(cos_angle, cfg: DimeNetConfig):
+    """[T] -> [T, n_spherical] cosine-Fourier basis of the angle."""
+    ang = jnp.arccos(jnp.clip(cos_angle, -1 + 1e-6, 1 - 1e-6))
+    m = jnp.arange(cfg.n_spherical, dtype=jnp.float32)
+    return jnp.cos(m[None, :] * ang[:, None])
+
+
+def init_params(cfg: DimeNetConfig, key):
+    d, nb = cfg.d_hidden, cfg.n_bilinear
+    ks = jax.random.split(key, 4 + 6 * cfg.n_blocks)
+    params = {
+        "embed_species": jax.random.normal(
+            ks[0], (cfg.n_species, d)) * 0.5,
+        "embed_rbf": L.init_mlp(ks[1], [cfg.n_radial, d]),
+        "embed_msg": L.init_mlp(ks[2], [3 * d, d]),
+        "blocks": [],
+        "out_head": L.init_mlp(ks[3], [d, d, 1]),
+    }
+    for i in range(cfg.n_blocks):
+        o = 4 + 6 * i
+        params["blocks"].append({
+            "rbf_proj": L.init_mlp(ks[o], [cfg.n_radial, d]),
+            "sbf_proj": L.init_mlp(ks[o + 1], [cfg.n_spherical, nb]),
+            "w_bilinear": jax.random.normal(
+                ks[o + 2], (nb, d, d)) * (d ** -0.5),
+            "msg_mlp": L.init_mlp(ks[o + 3], [d, d]),
+            "upd_mlp": L.init_mlp(ks[o + 4], [d, d]),
+            "out_proj": L.init_mlp(ks[o + 5], [d, d]),
+        })
+    return params
+
+
+def forward(params, b: TripletBatch, cfg: DimeNetConfig):
+    """Returns per-graph energy [n_graphs]."""
+    # geometry
+    pos_src = b.pos[jnp.minimum(b.src, b.n_nodes - 1)]
+    pos_dst = b.pos[jnp.minimum(b.dst, b.n_nodes - 1)]
+    vec = pos_dst - pos_src                     # r_ji = x_i - x_j
+    dist = jnp.where(b.edge_mask,
+                     jnp.linalg.norm(vec + 1e-9, axis=-1), cfg.cutoff)
+    rbf = radial_basis(dist, cfg)               # [E, n_radial]
+
+    # triplet angles: edges (k->j) and (j->i) meet at j
+    v_ji = vec[jnp.minimum(b.t_ji, b.n_edges - 1)]
+    v_kj = vec[jnp.minimum(b.t_kj, b.n_edges - 1)]
+    # angle between r_jk (= -v_kj) and r_ji
+    num = jnp.sum(-v_kj * v_ji, axis=-1)
+    den = jnp.maximum(jnp.linalg.norm(v_kj, axis=-1)
+                      * jnp.linalg.norm(v_ji, axis=-1), 1e-9)
+    sbf = angular_basis(num / den, cfg)         # [T, n_spherical]
+
+    # edge message init: h_j, h_i, rbf
+    hs = params["embed_species"][b.species]
+    h_j = hs[jnp.minimum(b.src, b.n_nodes - 1)]
+    h_i = hs[jnp.minimum(b.dst, b.n_nodes - 1)]
+    e_rbf = L.mlp(params["embed_rbf"], rbf)
+    m = L.mlp(params["embed_msg"], jnp.concatenate([h_j, h_i, e_rbf], -1))
+    m = jnp.where(b.edge_mask[:, None], m, 0.0)
+
+    energy = 0.0
+    for blk in params["blocks"]:
+        # directional aggregation over triplets
+        m_kj = m[jnp.minimum(b.t_kj, b.n_edges - 1)]          # [T, d]
+        a = L.mlp(blk["sbf_proj"], sbf)                        # [T, nb]
+        g = L.mlp(blk["rbf_proj"], rbf)                        # [E, d]
+        inter = jnp.einsum("tb,bdf,td->tf", a, blk["w_bilinear"], m_kj)
+        inter = jnp.where(b.t_mask[:, None], inter, 0.0)
+        agg = jax.ops.segment_sum(
+            inter, b.t_ji, num_segments=b.n_edges)             # [E, d]
+        m = m + L.mlp(blk["upd_mlp"],
+                      jax.nn.silu(L.mlp(blk["msg_mlp"], m) * g + agg))
+        m = jnp.where(b.edge_mask[:, None], m, 0.0)
+        # per-block output: scatter edge messages to atoms
+        h_out = jax.ops.segment_sum(
+            L.mlp(blk["out_proj"], m) * _envelope(
+                dist, cfg.cutoff, cfg.envelope_p)[:, None],
+            b.dst, num_segments=b.n_nodes + 1)[: b.n_nodes]
+        e_atom = L.mlp(params["out_head"], h_out)[:, 0]
+        e_atom = jnp.where(b.node_mask, e_atom, 0.0)
+        energy = energy + jax.ops.segment_sum(
+            e_atom, b.graph_id, num_segments=b.n_graphs)
+    return energy
+
+
+def loss_fn(params, b: TripletBatch, cfg: DimeNetConfig):
+    pred = forward(params, b, cfg)
+    err = pred - b.y
+    loss = jnp.mean(err ** 2)
+    return loss, {"mae": jnp.mean(jnp.abs(err))}

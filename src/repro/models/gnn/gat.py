@@ -1,0 +1,75 @@
+"""GAT (Veličković et al., arXiv:1710.10903) — gat-cora config.
+
+SDDMM (per-edge attention logits) -> segment softmax -> SpMM, all via the
+segment-op substrate.  Hidden layers concatenate heads; the output layer
+averages them (the paper's Cora setup: 2 layers, 8 hidden x 8 heads).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.gnn import layers as L
+
+
+@dataclasses.dataclass(frozen=True)
+class GATConfig:
+    n_layers: int = 2
+    d_hidden: int = 8
+    n_heads: int = 8
+    in_dim: int = 1433
+    n_classes: int = 7
+    dropout: float = 0.0   # inference/dry-run default; train pass sets >0
+
+
+def init_params(cfg: GATConfig, key):
+    ks = jax.random.split(key, cfg.n_layers * 3)
+    params = []
+    d_in = cfg.in_dim
+    for i in range(cfg.n_layers):
+        last = i == cfg.n_layers - 1
+        d_out = cfg.n_classes if last else cfg.d_hidden
+        H = cfg.n_heads
+        w = jax.random.normal(ks[3 * i], (d_in, H, d_out)) * (d_in ** -0.5)
+        a_l = jax.random.normal(ks[3 * i + 1], (H, d_out)) * (d_out ** -0.5)
+        a_r = jax.random.normal(ks[3 * i + 2], (H, d_out)) * (d_out ** -0.5)
+        params.append({"w": w, "a_l": a_l, "a_r": a_r})
+        d_in = d_out if last else d_out * H
+    return params
+
+
+def forward(params, batch: L.GraphBatch, cfg: GATConfig,
+            *, rngs=None):
+    x = batch.x
+    for i, lp in enumerate(params):
+        last = i == len(params) - 1
+        h = jnp.einsum("nf,fhd->nhd", x, lp["w"])          # [N, H, d]
+        el = jnp.einsum("nhd,hd->nh", h, lp["a_l"])
+        er = jnp.einsum("nhd,hd->nh", h, lp["a_r"])
+        # logits on edge (src -> dst): a_l . h_dst + a_r . h_src
+        logit = (L.gather_nodes(batch, el, batch.dst)
+                 + L.gather_nodes(batch, er, batch.src))
+        logit = jax.nn.leaky_relu(logit, 0.2)
+        alpha = L.seg_softmax(batch, logit)                 # [E, H]
+        msg = L.gather_nodes(batch, h, batch.src) * alpha[..., None]
+        agg = L.seg_sum(batch, msg)                         # [N, H, d]
+        if last:
+            x = jnp.mean(agg, axis=1)                       # head average
+        else:
+            x = jax.nn.elu(agg.reshape(agg.shape[0], -1))   # head concat
+    return x  # [N, n_classes]
+
+
+def loss_fn(params, batch: L.GraphBatch, cfg: GATConfig,
+            train_mask: jax.Array | None = None):
+    logits = forward(params, batch, cfg)
+    mask = batch.node_mask if train_mask is None else train_mask
+    labels = batch.y.astype(jnp.int32)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, labels[:, None], axis=-1)[:, 0]
+    loss = jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+    acc = jnp.sum((jnp.argmax(logits, -1) == labels) * mask) / \
+        jnp.maximum(jnp.sum(mask), 1.0)
+    return loss, {"acc": acc}

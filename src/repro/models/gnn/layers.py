@@ -1,0 +1,177 @@
+"""GNN substrate: padded graph batches + segment-op message passing.
+
+JAX has no native SpMM/EmbeddingBag — message passing here is explicit
+``gather(src) -> per-edge compute -> segment_{sum,max,min}(dst)`` over a
+padded edge list, exactly the kernel regime of the SSSP engine (the
+Pallas relax kernel covers the min/max aggregations on ELL layouts).
+Padding convention matches core.graph: sentinel node index == n_nodes,
+segment ops run with n_nodes+1 segments and slice the sentinel off.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class GraphBatch:
+    """A (possibly block-diagonal) padded graph.
+
+    node features x: [N_pad, F]; edges (src, dst): int32[E_pad] with
+    sentinel N for padding; node_mask: [N_pad] valid nodes; graph_id:
+    [N_pad] segment id for graph-level readout (0 for single graphs);
+    pos: [N_pad, 3] coordinates (molecular archs) or zeros.
+    """
+    n_nodes: int = dataclasses.field(metadata=dict(static=True))
+    n_graphs: int = dataclasses.field(metadata=dict(static=True))
+    x: jax.Array
+    src: jax.Array
+    dst: jax.Array
+    node_mask: jax.Array
+    graph_id: jax.Array
+    pos: jax.Array
+    y: jax.Array  # labels: [N_pad] (node tasks) or [n_graphs] (graph tasks)
+
+    @property
+    def n_seg(self):
+        return self.n_nodes + 1
+
+
+def gather_nodes(batch: GraphBatch, vals: jax.Array, idx: jax.Array,
+                 fill=0.0) -> jax.Array:
+    ext = jnp.concatenate(
+        [vals, jnp.full((1,) + vals.shape[1:], fill, vals.dtype)])
+    return ext[idx]
+
+
+def seg_sum(batch: GraphBatch, edge_vals, at="dst"):
+    ids = batch.dst if at == "dst" else batch.src
+    return jax.ops.segment_sum(
+        edge_vals, ids, num_segments=batch.n_seg)[: batch.n_nodes]
+
+
+def seg_max(batch: GraphBatch, edge_vals, at="dst"):
+    ids = batch.dst if at == "dst" else batch.src
+    return jax.ops.segment_max(
+        edge_vals, ids, num_segments=batch.n_seg)[: batch.n_nodes]
+
+
+def seg_min(batch: GraphBatch, edge_vals, at="dst"):
+    ids = batch.dst if at == "dst" else batch.src
+    return jax.ops.segment_min(
+        edge_vals, ids, num_segments=batch.n_seg)[: batch.n_nodes]
+
+
+def seg_mean(batch: GraphBatch, edge_vals, at="dst"):
+    s = seg_sum(batch, edge_vals, at)
+    ones = jnp.where(
+        (batch.dst if at == "dst" else batch.src) < batch.n_nodes, 1.0, 0.0)
+    cnt = jax.ops.segment_sum(
+        ones, batch.dst if at == "dst" else batch.src,
+        num_segments=batch.n_seg)[: batch.n_nodes]
+    return s / jnp.maximum(cnt, 1.0)[..., None]
+
+
+def seg_softmax(batch: GraphBatch, edge_logits: jax.Array) -> jax.Array:
+    """Edge softmax normalized over each destination's in-edges.
+
+    edge_logits: [E_pad, H]; padding edges get weight 0.
+    """
+    mx = jax.ops.segment_max(
+        edge_logits, batch.dst, num_segments=batch.n_seg)
+    mx = jnp.where(jnp.isfinite(mx), mx, 0.0)
+    ex = jnp.exp(edge_logits - mx[batch.dst])
+    ex = jnp.where((batch.dst < batch.n_nodes)[:, None], ex, 0.0)
+    den = jax.ops.segment_sum(ex, batch.dst, num_segments=batch.n_seg)
+    return ex / jnp.maximum(den[batch.dst], 1e-9)
+
+
+def in_degrees(batch: GraphBatch) -> jax.Array:
+    ones = jnp.where(batch.dst < batch.n_nodes, 1.0, 0.0)
+    return jax.ops.segment_sum(
+        ones, batch.dst, num_segments=batch.n_seg)[: batch.n_nodes]
+
+
+def graph_readout(batch: GraphBatch, node_vals: jax.Array,
+                  op: str = "sum") -> jax.Array:
+    vals = jnp.where(batch.node_mask[:, None], node_vals, 0.0)
+    out = jax.ops.segment_sum(
+        vals, batch.graph_id, num_segments=batch.n_graphs)
+    if op == "mean":
+        cnt = jax.ops.segment_sum(
+            batch.node_mask.astype(jnp.float32), batch.graph_id,
+            num_segments=batch.n_graphs)
+        out = out / jnp.maximum(cnt, 1.0)[:, None]
+    return out
+
+
+def mlp(params: list, x: jax.Array, act=jax.nn.silu) -> jax.Array:
+    for i, (w, b) in enumerate(params):
+        x = x @ w + b
+        if i < len(params) - 1:
+            x = act(x)
+    return x
+
+
+def init_mlp(key, dims: list[int], dtype=jnp.float32):
+    ks = jax.random.split(key, len(dims) - 1)
+    return [
+        (jax.random.normal(ks[i], (dims[i], dims[i + 1]), dtype)
+         * (dims[i] ** -0.5),
+         jnp.zeros((dims[i + 1],), dtype))
+        for i in range(len(dims) - 1)
+    ]
+
+
+# ---------------------------------------------------------------------------
+# Host-side batch builders
+# ---------------------------------------------------------------------------
+
+def build_batch(n: int, src, dst, x, y, *, pos=None, graph_id=None,
+                n_graphs: int = 1, e_pad_multiple: int = 128,
+                n_pad_multiple: int = 8) -> GraphBatch:
+    src = np.asarray(src, np.int32)
+    dst = np.asarray(dst, np.int32)
+    e = len(src)
+    e_pad = max(e_pad_multiple,
+                (e + e_pad_multiple - 1) // e_pad_multiple * e_pad_multiple)
+    n_pad = max(n_pad_multiple,
+                (n + n_pad_multiple - 1) // n_pad_multiple * n_pad_multiple)
+
+    def pad_e(a, fill):
+        out = np.full((e_pad,) + a.shape[1:], fill, a.dtype)
+        out[:e] = a
+        return out
+
+    def pad_n(a, fill=0):
+        out = np.full((n_pad,) + np.asarray(a).shape[1:], fill,
+                      np.asarray(a).dtype)
+        out[:n] = a
+        return out
+
+    x = np.asarray(x, np.float32)
+    mask = np.zeros(n_pad, bool)
+    mask[:n] = True
+    gid = (np.zeros(n, np.int32) if graph_id is None
+           else np.asarray(graph_id, np.int32))
+    pos = np.zeros((n, 3), np.float32) if pos is None else np.asarray(
+        pos, np.float32)
+    y = np.asarray(y)
+    if graph_id is not None and y.shape[0] == n_graphs:
+        y_arr = y                      # graph-level labels
+    else:
+        y_arr = pad_n(y, 0)            # node-level labels
+    return GraphBatch(
+        n_nodes=n_pad, n_graphs=n_graphs,
+        x=jnp.asarray(pad_n(x)),
+        src=jnp.asarray(pad_e(src, n_pad)),
+        dst=jnp.asarray(pad_e(dst, n_pad)),
+        node_mask=jnp.asarray(mask),
+        graph_id=jnp.asarray(pad_n(gid, 0)),
+        pos=jnp.asarray(pad_n(pos)),
+        y=jnp.asarray(y_arr),
+    )

@@ -1,0 +1,225 @@
+"""NequIP — E(3)-equivariant interatomic potential (arXiv:2101.03164).
+
+Kernel regime: spherical-harmonic evaluation + Clebsch-Gordan tensor
+product + scatter (taxonomy §B.3).  Features are irrep dicts
+{l: [N, mult, 2l+1]} with l <= l_max = 2; messages are CG-coupled
+products of neighbour features with edge spherical harmonics, weighted
+by a radial MLP of the Bessel basis, aggregated with segment_sum.
+
+The real-basis coupling tensors are derived numerically at import time:
+complex CG via the Racah formula -> complex->real unitary change of
+basis; odd (l1+l2+l3) paths are realified by dropping the global i
+(a parity-flip only — we track rotation order l, not parity, i.e. the
+model is SE(3)- rather than full E(3)-equivariant; recorded in
+DESIGN.md).  Equivariance is property-tested with numerically fitted
+Wigner-D matrices (tests/test_models_gnn.py).
+"""
+from __future__ import annotations
+
+import dataclasses
+from math import factorial, pi, sqrt
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.gnn import layers as L
+from repro.models.gnn.dimenet import radial_basis, DimeNetConfig, _envelope
+
+L_MAX = 2
+
+
+# ---------------------------------------------------------------------------
+# Real spherical harmonics (standard convention, m = -l..l)
+# ---------------------------------------------------------------------------
+
+def real_sh(unit: jnp.ndarray) -> dict[int, jnp.ndarray]:
+    """unit: [..., 3] unit vectors -> {l: [..., 2l+1]}."""
+    x, y, z = unit[..., 0], unit[..., 1], unit[..., 2]
+    c0 = sqrt(1 / (4 * pi))
+    c1 = sqrt(3 / (4 * pi))
+    out = {
+        0: jnp.full(unit.shape[:-1] + (1,), c0),
+        1: c1 * jnp.stack([y, z, x], axis=-1),
+        2: jnp.stack([
+            sqrt(15 / (4 * pi)) * x * y,
+            sqrt(15 / (4 * pi)) * y * z,
+            sqrt(5 / (16 * pi)) * (3 * z * z - 1.0),
+            sqrt(15 / (4 * pi)) * x * z,
+            sqrt(15 / (16 * pi)) * (x * x - y * y),
+        ], axis=-1),
+    }
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Clebsch-Gordan in the real basis (computed once, numpy float64)
+# ---------------------------------------------------------------------------
+
+def _cg_complex(l1: int, l2: int, l3: int) -> np.ndarray:
+    f = lambda n: float(factorial(n))  # noqa: E731
+    C = np.zeros((2 * l1 + 1, 2 * l2 + 1, 2 * l3 + 1))
+    for m1 in range(-l1, l1 + 1):
+        for m2 in range(-l2, l2 + 1):
+            m3 = m1 + m2
+            if abs(m3) > l3:
+                continue
+            pre = sqrt((2 * l3 + 1) * f(l3 + l1 - l2) * f(l3 - l1 + l2)
+                       * f(l1 + l2 - l3) / f(l1 + l2 + l3 + 1))
+            pre *= sqrt(f(l3 + m3) * f(l3 - m3) * f(l1 - m1) * f(l1 + m1)
+                        * f(l2 - m2) * f(l2 + m2))
+            s = 0.0
+            for k in range(0, l1 + l2 + l3 + 1):
+                d = (k, l1 + l2 - l3 - k, l1 - m1 - k, l2 + m2 - k,
+                     l3 - l2 + m1 + k, l3 - l1 - m2 + k)
+                if min(d) < 0:
+                    continue
+                s += (-1) ** k / np.prod([f(v) for v in d])
+            C[m1 + l1, m2 + l2, m3 + l3] = pre * s
+    return C
+
+
+def _real_U(l: int) -> np.ndarray:
+    """Unitary mapping complex SH -> real SH (rows m_real, cols m_cplx)."""
+    U = np.zeros((2 * l + 1, 2 * l + 1), complex)
+    for m in range(-l, l + 1):
+        if m == 0:
+            U[l, l] = 1.0
+        elif m > 0:
+            U[m + l, -m + l] = 1 / sqrt(2)
+            U[m + l, m + l] = (-1) ** m / sqrt(2)
+        else:
+            am = -m
+            U[m + l, m + l] = 1j / sqrt(2)
+            U[m + l, am + l] = -1j * (-1) ** am / sqrt(2)
+    return U
+
+
+def _cg_real(l1: int, l2: int, l3: int) -> np.ndarray:
+    C = _cg_complex(l1, l2, l3).astype(complex)
+    U1, U2, U3 = _real_U(l1), _real_U(l2), _real_U(l3)
+    W = np.einsum("cn,abn,xa,yb->xyc", U3, C,
+                  U1.conj(), U2.conj())
+    if np.abs(W.real).max() >= np.abs(W.imag).max():
+        W = W.real
+    else:
+        W = W.imag  # odd paths: drop the global i (parity flip only)
+    return np.ascontiguousarray(W)
+
+
+PATHS: list[tuple[int, int, int]] = [
+    (l1, l2, l3)
+    for l1 in range(L_MAX + 1)
+    for l2 in range(L_MAX + 1)
+    for l3 in range(L_MAX + 1)
+    if abs(l1 - l2) <= l3 <= l1 + l2
+]
+CG = {p: jnp.asarray(_cg_real(*p), jnp.float32) for p in PATHS}
+
+
+# ---------------------------------------------------------------------------
+# Model
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class NequIPConfig:
+    n_layers: int = 5
+    mult: int = 32          # d_hidden: channels per irrep
+    l_max: int = 2
+    n_rbf: int = 8
+    cutoff: float = 5.0
+    n_species: int = 16
+
+    @property
+    def paths(self):
+        return [p for p in PATHS if max(p) <= self.l_max]
+
+
+def init_params(cfg: NequIPConfig, key):
+    m = cfg.mult
+    n_paths = len(cfg.paths)
+    ks = jax.random.split(key, 4 + cfg.n_layers)
+    params = {
+        "embed": jax.random.normal(ks[0], (cfg.n_species, m)) * 0.5,
+        "layers": [],
+        "out": L.init_mlp(ks[1], [m, m, 1]),
+    }
+    for i in range(cfg.n_layers):
+        k1, k2, k3, k4, k5 = jax.random.split(ks[2 + i], 5)
+        lp = {
+            # radial MLP -> per-path per-channel weights
+            "radial": L.init_mlp(k1, [cfg.n_rbf, m, n_paths * m]),
+            # self-interaction per output l
+            "self": {
+                l: jax.random.normal(k2, (m, m)) * (m ** -0.5)
+                for l in range(cfg.l_max + 1)
+            },
+            "skip": {
+                l: jax.random.normal(k3, (m, m)) * (m ** -0.5)
+                for l in range(cfg.l_max + 1)
+            },
+            "gate": L.init_mlp(k4, [m, cfg.l_max * m]),
+        }
+        params["layers"].append(lp)
+    return params
+
+
+def forward(params, b, cfg: NequIPConfig):
+    """b: TripletBatch-compatible (species, pos, src, dst, edge_mask,
+    node_mask, graph_id) -> per-graph energy [n_graphs]."""
+    N = b.n_nodes
+    src = jnp.minimum(b.src, N - 1)
+    dst = jnp.minimum(b.dst, N - 1)
+    vec = b.pos[dst] - b.pos[src]
+    dist = jnp.linalg.norm(vec + 1e-9, axis=-1)
+    dist = jnp.where(b.edge_mask, dist, cfg.cutoff)
+    unit = vec / jnp.maximum(dist, 1e-9)[:, None]
+    rcfg = DimeNetConfig(n_radial=cfg.n_rbf, cutoff=cfg.cutoff)
+    rbf = radial_basis(dist, rcfg)                        # [E, n_rbf]
+    Y = real_sh(unit)                                     # {l2: [E, 2l2+1]}
+    env = _envelope(dist, cfg.cutoff, 6)[:, None]
+
+    m = cfg.mult
+    h = {0: params["embed"][b.species][:, :, None]}       # [N, m, 1]
+    for l in range(1, cfg.l_max + 1):
+        h[l] = jnp.zeros((N, m, 2 * l + 1))
+
+    paths = cfg.paths
+    for lp in params["layers"]:
+        w_all = L.mlp(lp["radial"], rbf).reshape(
+            rbf.shape[0], len(paths), m)                  # [E, P, m]
+        w_all = w_all * env[..., None]
+        agg = {l: jnp.zeros((N, m, 2 * l + 1))
+               for l in range(cfg.l_max + 1)}
+        for pi, (l1, l2, l3) in enumerate(paths):
+            hj = h[l1][src]                               # [E, m, 2l1+1]
+            msg = jnp.einsum("abc,ema,eb->emc", CG[(l1, l2, l3)],
+                             hj, Y[l2])                   # [E, m, 2l3+1]
+            msg = msg * w_all[:, pi, :, None]
+            msg = jnp.where(b.edge_mask[:, None, None], msg, 0.0)
+            agg[l3] = agg[l3] + jax.ops.segment_sum(
+                msg, dst, num_segments=N)
+        # self-interaction + gated nonlinearity
+        scal = jnp.einsum("nmi,mk->nki", agg[0], lp["self"][0])[:, :, 0]
+        scal = jax.nn.silu(scal)
+        gates = jax.nn.sigmoid(
+            L.mlp(lp["gate"], scal).reshape(N, cfg.l_max, m))
+        h_new = {0: (scal + jnp.einsum(
+            "nmi,mk->nki", h[0], lp["skip"][0])[:, :, 0])[:, :, None]}
+        for l in range(1, cfg.l_max + 1):
+            mixed = jnp.einsum("nmi,mk->nki", agg[l], lp["self"][l])
+            mixed = mixed * gates[:, l - 1, :, None]
+            h_new[l] = mixed + jnp.einsum(
+                "nmi,mk->nki", h[l], lp["skip"][l])
+        h = h_new
+
+    e_atom = L.mlp(params["out"], h[0][:, :, 0])[:, 0]
+    e_atom = jnp.where(b.node_mask, e_atom, 0.0)
+    return jax.ops.segment_sum(e_atom, b.graph_id,
+                               num_segments=b.n_graphs)
+
+
+def loss_fn(params, b, cfg: NequIPConfig):
+    pred = forward(params, b, cfg)
+    err = pred - b.y
+    return jnp.mean(err ** 2), {"mae": jnp.mean(jnp.abs(err))}

@@ -1,0 +1,146 @@
+"""Mixture-of-Experts FFN: top-k routing, sort-based capacity dispatch.
+
+Dispatch strategy (MaxText-style "dropping"): per batch row, tokens are
+stably sorted by expert id; each token's rank within its expert decides
+whether it fits the expert's capacity C = ceil(S * top_k * cf / E).
+Tokens beyond capacity fall through the residual (standard GShard drop
+semantics).  This keeps every shape static, avoids the O(S*E*C) dispatch
+one-hot of the einsum formulation (which at the assigned shapes would be
+tens of GB), and lowers to sorts + gathers that shard cleanly over the
+data axes.
+
+Expert-parallel sharding: the dispatched buffer [B, E, C, d] is
+constrained to shard E over the `model` axis (an all-to-all under SPMD),
+the expert einsums then run fully local to each EP shard.  Shared
+experts (DeepSeek-MoE) are a dense SwiGLU branch added to the routed
+output.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import normal_init, split_keys
+
+
+@dataclasses.dataclass(frozen=True)
+class MoEConfig:
+    n_experts: int
+    top_k: int
+    d_ff_expert: int
+    n_shared: int = 0
+    capacity_factor: float = 1.25
+    router_aux_weight: float = 0.01
+    router_z_weight: float = 1e-3
+
+
+def init_moe_params(key, cfg: MoEConfig, d_model: int, dtype):
+    ks = split_keys(key, 6)
+    E, f = cfg.n_experts, cfg.d_ff_expert
+    p = {
+        "router": normal_init(ks[0], (d_model, E), d_model ** -0.5,
+                              jnp.float32),
+        "we_gate": normal_init(ks[1], (E, d_model, f), d_model ** -0.5,
+                               dtype),
+        "we_up": normal_init(ks[2], (E, d_model, f), d_model ** -0.5, dtype),
+        "we_down": normal_init(ks[3], (E, f, d_model), f ** -0.5, dtype),
+    }
+    if cfg.n_shared:
+        fs = cfg.n_shared * f
+        p["ws_gate"] = normal_init(ks[4], (d_model, fs), d_model ** -0.5,
+                                   dtype)
+        p["ws_up"] = normal_init(ks[5], (d_model, fs), d_model ** -0.5,
+                                 dtype)
+        p["ws_down"] = normal_init(ks[0], (fs, d_model), fs ** -0.5, dtype)
+    return p
+
+
+def capacity(cfg: MoEConfig, s: int) -> int:
+    c = int(s * cfg.top_k * cfg.capacity_factor / cfg.n_experts + 0.999)
+    return max(8, -(-c // 8) * 8)  # round up to 8
+
+
+def moe_ffn(params, x: jax.Array, cfg: MoEConfig, *,
+            ep_constraint=None):
+    """x: [B, S, d] -> (out [B, S, d], aux_losses dict).
+
+    ep_constraint: optional callable applied to the [B, E, C, d]
+    dispatched buffer (a with_sharding_constraint that pins E to the
+    `model` mesh axis — the all-to-all boundary).
+    """
+    B, S, d = x.shape
+    E, K = cfg.n_experts, cfg.top_k
+    C = capacity(cfg, S)
+
+    logits = jnp.einsum("bsd,de->bse", x.astype(jnp.float32),
+                        params["router"])                       # f32 routing
+    probs = jax.nn.softmax(logits, axis=-1)
+    gates, eidx = jax.lax.top_k(probs, K)                       # [B, S, K]
+    gates = gates / jnp.maximum(
+        jnp.sum(gates, axis=-1, keepdims=True), 1e-9)
+    # routing decisions are made in f32; the gates that MULTIPLY
+    # activations drop to the activation dtype so every downstream
+    # tensor (and its cotangent — the TP all-reduce payload) stays bf16
+    gates = gates.astype(x.dtype)
+
+    # ---- aux losses (Switch LB + z-loss), computed on full router state
+    me = jnp.mean(probs, axis=(0, 1))                           # [E]
+    # dispatch fractions via scatter-add (a [B,S,K,E] one-hot would be GBs)
+    ce = jnp.zeros((E,), jnp.float32).at[eidx.reshape(-1)].add(1.0)
+    ce = ce / (B * S * K)
+    aux_lb = E * jnp.sum(me * ce)
+    z = jax.scipy.special.logsumexp(logits, axis=-1)
+    aux_z = jnp.mean(z ** 2)
+
+    # ---- per-row sort-based dispatch (vmapped over batch) ----
+    def dispatch_row(xr, er, gr):
+        # xr: [S, d]; er: [S, K] expert ids; gr: [S, K] gates
+        fid = er.reshape(S * K)
+        fgate = gr.reshape(S * K)
+        ftok = jnp.repeat(jnp.arange(S), K)
+        order = jnp.argsort(fid, stable=True)
+        fid_s, ftok_s, fgate_s = fid[order], ftok[order], fgate[order]
+        counts = jnp.bincount(fid_s, length=E)
+        start = jnp.cumsum(counts) - counts                     # [E]
+        rank = jnp.arange(S * K) - start[fid_s]
+        keep = rank < C
+        slot = jnp.where(keep, fid_s * C + rank, E * C)         # drop slot
+        buf = jnp.zeros((E * C, d), xr.dtype).at[slot].add(
+            xr[ftok_s] * keep[:, None].astype(xr.dtype),
+            mode="drop")
+        return buf.reshape(E, C, d), (ftok_s, fgate_s, slot, keep)
+
+    buf, (ftok_s, fgate_s, slot, keep) = jax.vmap(dispatch_row)(
+        x, eidx, gates)                                         # [B, E, C, d]
+    if ep_constraint is not None:
+        buf = ep_constraint(buf)
+
+    # ---- expert SwiGLU, local to each EP shard ----
+    g = jnp.einsum("becd,edf->becf", buf, params["we_gate"])
+    u = jnp.einsum("becd,edf->becf", buf, params["we_up"])
+    h = jax.nn.silu(g.astype(jnp.float32)).astype(x.dtype) * u
+    eo = jnp.einsum("becf,efd->becd", h, params["we_down"])
+    if ep_constraint is not None:
+        eo = ep_constraint(eo)
+
+    # ---- combine back to token order ----
+    def combine_row(eor, ftok_sr, fgate_sr, slotr, keepr):
+        flat = eor.reshape(E * C, d)
+        vals = flat[jnp.minimum(slotr, E * C - 1)]
+        vals = vals * (keepr[:, None] * fgate_sr[:, None]).astype(vals.dtype)
+        return jnp.zeros((S, d), vals.dtype).at[ftok_sr].add(vals)
+
+    out = jax.vmap(combine_row)(eo, ftok_s, fgate_s, slot, keep)
+
+    # ---- shared experts (dense branch) ----
+    if "ws_gate" in params:
+        sg = jnp.einsum("bsd,df->bsf", x, params["ws_gate"])
+        su = jnp.einsum("bsd,df->bsf", x, params["ws_up"])
+        sh = jax.nn.silu(sg.astype(jnp.float32)).astype(x.dtype) * su
+        out = out + jnp.einsum("bsf,fd->bsd", sh, params["ws_down"])
+
+    aux = {"moe_lb": aux_lb * cfg.router_aux_weight,
+           "moe_z": aux_z * cfg.router_z_weight}
+    return out, aux

@@ -1,0 +1,391 @@
+"""Decoder-only LM zoo: dense + MoE, GQA, RoPE, qk-norm, chunked-local.
+
+One parameterized architecture covers all five assigned LM configs
+(configs/*.py instantiate it).  Structure:
+
+  * params["layers"] holds per-layer tensors STACKED on a leading L dim;
+    the forward pass is a single lax.scan over layers, keeping the HLO
+    (and compile time at 64 layers / 100B+ params) small.
+  * Attention is online-softmax (models/attention.py) — no [S,S] buffer.
+  * Heterogeneous layers (Llama-4: 3/4 chunked-local + 1/4 global) are a
+    per-layer boolean scanned alongside the params, switched with
+    lax.cond inside the body.
+  * `ShardingHooks` lets the launcher inject with_sharding_constraint
+    at the three activation boundaries that matter (residual stream,
+    MoE dispatch buffer, logits) without the model importing any mesh.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention as attn_lib
+from repro.models.common import (apply_rope, apply_rope_at, normal_init,
+                                 rms_norm, rope_frequencies, split_keys)
+from repro.models.moe import MoEConfig, init_moe_params, moe_ffn
+
+
+@dataclasses.dataclass(frozen=True)
+class LMConfig:
+    name: str
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab: int
+    head_dim: int | None = None          # default d_model // n_heads
+    qk_norm: bool = False                # qwen3
+    moe: MoEConfig | None = None
+    moe_every: int = 1                   # 2 = alternating dense/MoE
+    #   (llama4 interleave_moe_layer_step: odd layers MoE, even dense;
+    #   the scan walks super-blocks of [dense layer, moe layer])
+    attn_kind: str = "full"              # "full" | "chunked_local"
+    local_chunk: int = 8192              # llama4 chunk size
+    global_every: int = 4                # every Nth layer is global
+    rope_theta: float = 5e5
+    norm_eps: float = 1e-6
+    param_dtype: str = "bfloat16"
+    remat: bool = True
+    remat_policy: str = "full"           # full | dots | nothing_saveable
+    #   "dots" = dots_with_no_batch_dims_saveable: backward reuses matmul
+    #   outputs (incl. expert einsums + the MoE all-to-all results)
+    #   instead of recomputing them — trades activation memory for the
+    #   recompute flops AND the duplicated dispatch collectives.
+    max_seq: int = 8192                  # rope table length for training
+    scan_unroll: bool = False            # unroll layer+attention scans so
+    #   XLA cost_analysis counts every iteration (dry-run calibration;
+    #   while-loop bodies are otherwise counted once — launch/calibrate.py)
+
+    @property
+    def hd(self) -> int:
+        return self.head_dim or self.d_model // self.n_heads
+
+    @property
+    def dtype(self):
+        return jnp.dtype(self.param_dtype)
+
+    @property
+    def sub_quadratic(self) -> bool:
+        return self.attn_kind == "chunked_local"
+
+    def layer_is_global(self, i: int) -> bool:
+        if self.attn_kind == "full":
+            return True
+        return (i % self.global_every) == (self.global_every - 1)
+
+    def layer_is_moe(self, i: int) -> bool:
+        if not self.moe:
+            return False
+        return (i % self.moe_every) == (self.moe_every - 1)
+
+    @property
+    def n_moe_layers(self) -> int:
+        return sum(self.layer_is_moe(i) for i in range(self.n_layers))
+
+    def param_count(self) -> int:
+        """Analytic parameter count (drives 6ND in the roofline)."""
+        d, hd, H, Hkv, L = (self.d_model, self.hd, self.n_heads,
+                            self.n_kv_heads, self.n_layers)
+        attn = d * H * hd + 2 * d * Hkv * hd + H * hd * d + 2 * d
+        if self.qk_norm:
+            attn += 2 * hd
+        dense_ffn = 3 * d * self.d_ff
+        total = self.vocab * d * 2 + d + L * attn
+        for i in range(L):
+            if self.layer_is_moe(i):
+                E, f = self.moe.n_experts, self.moe.d_ff_expert
+                total += d * E + 3 * E * d * f
+                if self.moe.n_shared:
+                    total += 3 * d * f * self.moe.n_shared
+            else:
+                total += dense_ffn
+        return total
+
+    def active_param_count(self) -> int:
+        """Activated params per token (MoE: top-k + shared only)."""
+        if not self.moe:
+            return self.param_count()
+        d = self.d_model
+        E, f, K = self.moe.n_experts, self.moe.d_ff_expert, self.moe.top_k
+        full = self.param_count()
+        nm = self.n_moe_layers
+        return full - nm * 3 * E * d * f + nm * 3 * K * d * f
+
+
+@dataclasses.dataclass
+class ShardingHooks:
+    act: Callable = lambda x: x          # [B, S, d] residual stream
+    moe_buf: Callable | None = None      # [B, E, C, d] dispatch buffer
+    logits: Callable = lambda x: x       # [B, S, vocab]
+    cache: Callable = lambda x: x        # KV cache entries
+    # sequence-parallel attention (archs whose head count doesn't divide
+    # the model axis): queries shard S over `model`, K/V replicate (one
+    # all-gather per layer instead of full activation replication)
+    attn_q: Callable | None = None       # [B, S, Hkv, G, hd]
+    attn_kv: Callable | None = None      # [B, S, Hkv, hd]
+
+
+def _init_layer(key, cfg: LMConfig, moe: bool):
+    d, hd, H, Hkv = cfg.d_model, cfg.hd, cfg.n_heads, cfg.n_kv_heads
+    ks = split_keys(key, 10)
+    dt = cfg.dtype
+    p = {
+        "attn_norm": jnp.ones((d,), jnp.float32),
+        "ffn_norm": jnp.ones((d,), jnp.float32),
+        "wq": normal_init(ks[0], (d, H * hd), d ** -0.5, dt),
+        "wk": normal_init(ks[1], (d, Hkv * hd), d ** -0.5, dt),
+        "wv": normal_init(ks[2], (d, Hkv * hd), d ** -0.5, dt),
+        "wo": normal_init(ks[3], (H * hd, d), (H * hd) ** -0.5, dt),
+    }
+    if cfg.qk_norm:
+        p["q_norm"] = jnp.ones((hd,), jnp.float32)
+        p["k_norm"] = jnp.ones((hd,), jnp.float32)
+    if moe:
+        p["moe"] = init_moe_params(ks[4], cfg.moe, d, dt)
+    else:
+        p["w_gate"] = normal_init(ks[5], (d, cfg.d_ff), d ** -0.5, dt)
+        p["w_up"] = normal_init(ks[6], (d, cfg.d_ff), d ** -0.5, dt)
+        p["w_down"] = normal_init(ks[7], (cfg.d_ff, d), cfg.d_ff ** -0.5, dt)
+    return p
+
+
+def init_params(cfg: LMConfig, key):
+    """params["layers"] is stacked per SUPER-BLOCK: with moe_every == 1
+    a super-block is one layer ({"a": ...}); with moe_every == 2 it is a
+    dense layer + a MoE layer ({"a": dense, "b": moe})."""
+    assert cfg.n_layers % cfg.moe_every == 0
+    k_embed, k_head, k_layers = jax.random.split(key, 3)
+    n_super = cfg.n_layers // cfg.moe_every
+    layer_keys = jnp.stack(split_keys(k_layers, n_super))
+    sub_moe = [cfg.layer_is_moe(i) for i in range(cfg.moe_every)]
+    names = _SUB_NAMES[: cfg.moe_every]
+
+    def init_super(k):
+        subs = split_keys(k, cfg.moe_every)
+        return {nm: _init_layer(sk, cfg, m)
+                for nm, sk, m in zip(names, subs, sub_moe)}
+
+    layers = jax.vmap(init_super)(layer_keys)
+    return {
+        "embed": normal_init(k_embed, (cfg.vocab, cfg.d_model), 0.02,
+                             cfg.dtype),
+        "lm_head": normal_init(k_head, (cfg.d_model, cfg.vocab),
+                               cfg.d_model ** -0.5, cfg.dtype),
+        "final_norm": jnp.ones((cfg.d_model,), jnp.float32),
+        "layers": layers,
+    }
+
+
+_SUB_NAMES = ("a", "b", "c", "d")
+
+
+def _attention_block(lp, x, cfg: LMConfig, cos, sin, is_global,
+                     hooks: ShardingHooks):
+    B, S, d = x.shape
+    H, Hkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    G = H // Hkv
+    h = rms_norm(x, lp["attn_norm"], cfg.norm_eps)
+    q = jnp.einsum("bsd,dh->bsh", h, lp["wq"]).reshape(B, S, Hkv, G, hd)
+    k = jnp.einsum("bsd,dh->bsh", h, lp["wk"]).reshape(B, S, Hkv, hd)
+    v = jnp.einsum("bsd,dh->bsh", h, lp["wv"]).reshape(B, S, Hkv, hd)
+    if cfg.qk_norm:
+        q = rms_norm(q, lp["q_norm"], cfg.norm_eps)
+        k = rms_norm(k, lp["k_norm"], cfg.norm_eps)
+    q = apply_rope(q.reshape(B, S, Hkv * G, hd), cos, sin)
+    q = q.reshape(B, S, Hkv, G, hd)
+    k = apply_rope(k, cos, sin)
+    if hooks.attn_q is not None:
+        q = hooks.attn_q(q)
+    if hooks.attn_kv is not None:
+        k = hooks.attn_kv(k)
+        v = hooks.attn_kv(v)
+
+    unroll = cfg.scan_unroll
+    if cfg.attn_kind == "full":
+        o = attn_lib.flash_attention_gqa(q, k, v, causal=True,
+                                         unroll=unroll)
+    else:
+        o = jax.lax.cond(
+            is_global,
+            lambda: attn_lib.flash_attention_gqa(q, k, v, causal=True,
+                                                 unroll=unroll),
+            lambda: attn_lib.chunked_local_attention(
+                q, k, v, chunk=cfg.local_chunk, unroll=unroll))
+    o = o.reshape(B, S, H * hd)
+    return jnp.einsum("bsh,hd->bsd", o, lp["wo"])
+
+
+def _ffn_block(lp, x, cfg: LMConfig, hooks: ShardingHooks):
+    h = rms_norm(x, lp["ffn_norm"], cfg.norm_eps)
+    if "moe" in lp:
+        out, aux = moe_ffn(lp["moe"], h, cfg.moe,
+                           ep_constraint=hooks.moe_buf)
+        return out, aux
+    g = jnp.einsum("bsd,df->bsf", h, lp["w_gate"])
+    u = jnp.einsum("bsd,df->bsf", h, lp["w_up"])
+    hidden = jax.nn.silu(g.astype(jnp.float32)).astype(x.dtype) * u
+    return jnp.einsum("bsf,fd->bsd", hidden, lp["w_down"]), {}
+
+
+def forward(params, tokens: jax.Array, cfg: LMConfig,
+            hooks: ShardingHooks | None = None):
+    """tokens [B, S] -> logits [B, S, vocab] (f32), aux loss dict."""
+    hooks = hooks or ShardingHooks()
+    B, S = tokens.shape
+    x = params["embed"][tokens]
+    x = hooks.act(x)
+    cos, sin = rope_frequencies(cfg.hd, S, cfg.rope_theta)
+    me = cfg.moe_every
+    n_super = cfg.n_layers // me
+    names = _SUB_NAMES[:me]
+    # [n_super, moe_every] global-attention flags
+    is_global = jnp.asarray(
+        [[cfg.layer_is_global(s * me + j) for j in range(me)]
+         for s in range(n_super)])
+
+    def layer(x, scanned):
+        lp_super, glob = scanned
+        aux_vec = jnp.zeros((2,), jnp.float32)
+        for j, nm in enumerate(names):
+            lp = lp_super[nm]
+            x = x + _attention_block(lp, x, cfg, cos, sin, glob[j], hooks)
+            x = hooks.act(x)
+            f, aux = _ffn_block(lp, x, cfg, hooks)
+            x = hooks.act(x + f)
+            aux_vec = aux_vec + jnp.stack(
+                [aux.get("moe_lb", jnp.float32(0)),
+                 aux.get("moe_z", jnp.float32(0))])
+        return x, aux_vec
+
+    if cfg.remat:
+        policy = {
+            "full": None,
+            "dots": jax.checkpoint_policies.dots_with_no_batch_dims_saveable,
+            "nothing_saveable": jax.checkpoint_policies.nothing_saveable,
+        }[cfg.remat_policy]
+        layer_fn = (jax.checkpoint(layer, policy=policy) if policy
+                    else jax.checkpoint(layer))
+    else:
+        layer_fn = layer
+    x, aux_all = jax.lax.scan(layer_fn, x, (params["layers"], is_global),
+                              unroll=n_super if cfg.scan_unroll else 1)
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = jnp.einsum("bsd,dv->bsv", x, params["lm_head"])
+    logits = hooks.logits(logits.astype(jnp.float32))
+    aux = {"moe_lb": jnp.sum(aux_all[:, 0]), "moe_z": jnp.sum(aux_all[:, 1])}
+    return logits, aux
+
+
+def loss_fn(params, batch, cfg: LMConfig,
+            hooks: ShardingHooks | None = None, z_weight: float = 1e-4):
+    """batch: {"tokens": [B, S+1]} -> scalar loss, metrics."""
+    tokens = batch["tokens"]
+    inputs, targets = tokens[:, :-1], tokens[:, 1:]
+    logits, aux = forward(params, inputs, cfg, hooks)
+    lse = jax.scipy.special.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, targets[..., None], axis=-1)[..., 0]
+    nll = jnp.mean(lse - gold)
+    zloss = z_weight * jnp.mean(lse ** 2)
+    loss = nll + zloss + aux["moe_lb"] + aux["moe_z"]
+    return loss, {"nll": nll, "zloss": zloss, **aux}
+
+
+# ---------------------------------------------------------------------------
+# Serving: prefill + single-token decode with KV cache
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class KVCache:
+    """Per-layer python list (decode loops over layers unrolled; the HLO
+    per layer is matvec-scale so unrolling stays small).  Local (chunked)
+    layers allocate only `chunk` slots — the long_500k memory win."""
+    k: list  # per layer [B, S_l, Hkv, hd]
+    v: list
+    pos: jax.Array  # int32 scalar: tokens decoded so far
+
+
+def init_cache(cfg: LMConfig, batch: int, max_seq: int,
+               dtype=None) -> KVCache:
+    dtype = dtype or cfg.dtype
+    ks, vs = [], []
+    for i in range(cfg.n_layers):
+        s = max_seq if cfg.layer_is_global(i) else min(
+            cfg.local_chunk, max_seq)
+        ks.append(jnp.zeros((batch, s, cfg.n_kv_heads, cfg.hd), dtype))
+        vs.append(jnp.zeros((batch, s, cfg.n_kv_heads, cfg.hd), dtype))
+    return KVCache(k=ks, v=vs, pos=jnp.int32(0))
+
+
+jax.tree_util.register_pytree_node(
+    KVCache,
+    lambda c: ((c.k, c.v, c.pos), None),
+    lambda _, t: KVCache(k=t[0], v=t[1], pos=t[2]))
+
+
+def decode_step(params, cache: KVCache, token: jax.Array, cfg: LMConfig,
+                hooks: ShardingHooks | None = None):
+    """token [B] int32 -> logits [B, vocab], updated cache."""
+    hooks = hooks or ShardingHooks()
+    B = token.shape[0]
+    H, Hkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    G = H // Hkv
+    x = params["embed"][token][:, None, :]        # [B, 1, d]
+    pos = cache.pos
+    new_k, new_v = [], []
+    for i in range(cfg.n_layers):
+        s, sub = divmod(i, cfg.moe_every)
+        lp = jax.tree.map(lambda a: a[s],
+                          params["layers"][_SUB_NAMES[sub]])
+        is_global = cfg.layer_is_global(i)
+        h = rms_norm(x, lp["attn_norm"], cfg.norm_eps)
+        q = jnp.einsum("bsd,dh->bsh", h, lp["wq"]).reshape(B, 1, Hkv, G, hd)
+        k = jnp.einsum("bsd,dh->bsh", h, lp["wk"]).reshape(B, 1, Hkv, hd)
+        v = jnp.einsum("bsd,dh->bsh", h, lp["wv"]).reshape(B, 1, Hkv, hd)
+        if cfg.qk_norm:
+            q = rms_norm(q, lp["q_norm"], cfg.norm_eps)
+            k = rms_norm(k, lp["k_norm"], cfg.norm_eps)
+        q = apply_rope_at(q.reshape(B, 1, Hkv * G, hd), pos, hd,
+                          cfg.rope_theta).reshape(B, 1, Hkv, G, hd)
+        k = apply_rope_at(k, pos, hd, cfg.rope_theta)
+
+        s_l = cache.k[i].shape[1]
+        slot = pos % s_l if not is_global else pos
+        kc = jax.lax.dynamic_update_slice(
+            cache.k[i], k.astype(cache.k[i].dtype), (0, slot, 0, 0))
+        vc = jax.lax.dynamic_update_slice(
+            cache.v[i], v.astype(cache.v[i].dtype), (0, slot, 0, 0))
+        kc, vc = hooks.cache(kc), hooks.cache(vc)
+        new_k.append(kc)
+        new_v.append(vc)
+        # valid length: global layers see pos+1; local layers see the
+        # current chunk only (slots 0 .. pos % chunk)
+        length = pos + 1 if is_global else (pos % s_l) + 1
+        o = attn_lib.decode_attention(q, kc, vc, length)
+        x = x + jnp.einsum("bsh,hd->bsd",
+                           o.reshape(B, 1, H * hd), lp["wo"])
+        f, _ = _ffn_block(lp, x, cfg, hooks)
+        x = x + f
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = jnp.einsum("bsd,dv->bsv", x, params["lm_head"])[:, 0]
+    return logits.astype(jnp.float32), KVCache(k=new_k, v=new_v, pos=pos + 1)
+
+
+def prefill(params, tokens: jax.Array, cfg: LMConfig, max_seq: int,
+            hooks: ShardingHooks | None = None):
+    """Run the prompt through the model, filling a cache.
+
+    Implemented as forward() for logits plus a scan of decode steps for
+    the cache in tests; production prefill (batched, right-padded) lives
+    in runtime/serve_loop.py.
+    """
+    B, S = tokens.shape
+    cache = init_cache(cfg, B, max_seq)
+    logits = None
+    for t in range(S):
+        logits, cache = decode_step(params, cache, tokens[:, t], cfg, hooks)
+    return logits, cache

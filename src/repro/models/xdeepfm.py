@@ -1,0 +1,144 @@
+"""xDeepFM (arXiv:1803.05170): embedding bag + CIN + DNN + linear.
+
+JAX has no EmbeddingBag — the lookup is built here from `jnp.take` +
+`jax.ops.segment_sum` (multi-hot fields reduce over their values), per
+the brief.  The CIN interaction is the Pallas kernel (kernels/cin.py)
+behind the ops.py dispatch; the pure-jnp path is the einsum oracle.
+
+Table layout: one logical [total_rows, embed_dim] tensor with per-field
+row offsets — this is the tensor the production sharding row-shards
+over the `model` axis (table parallelism), turning lookups into
+all-to-all-ish gathers under SPMD.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import ops as kops
+from repro.models.gnn.layers import init_mlp, mlp
+
+
+@dataclasses.dataclass(frozen=True)
+class XDeepFMConfig:
+    n_fields: int = 39
+    embed_dim: int = 10
+    cin_layers: tuple[int, ...] = (200, 200, 200)
+    mlp_dims: tuple[int, ...] = (400, 400)
+    # Criteo-like vocabulary sizes: a few huge fields + many small ones
+    field_sizes: tuple[int, ...] = ()
+    use_pallas_cin: bool | None = None
+
+    def sizes(self) -> tuple[int, ...]:
+        if self.field_sizes:
+            return self.field_sizes
+        base = [1_000_000, 500_000, 250_000, 100_000, 50_000]
+        rest = [int(10_000 / (1 + i)) + 100
+                for i in range(self.n_fields - len(base))]
+        return tuple((base + rest)[: self.n_fields])
+
+    @property
+    def total_rows(self) -> int:
+        return int(sum(self.sizes()))
+
+    @property
+    def offsets(self) -> np.ndarray:
+        return np.concatenate([[0], np.cumsum(self.sizes())[:-1]])
+
+
+def init_params(cfg: XDeepFMConfig, key):
+    ks = jax.random.split(key, 6)
+    d = cfg.embed_dim
+    m = cfg.n_fields
+    params = {
+        "table": jax.random.normal(
+            ks[0], (cfg.total_rows, d), jnp.float32) * 0.01,
+        "linear": jax.random.normal(
+            ks[1], (cfg.total_rows,), jnp.float32) * 0.01,
+        "cin": [],
+        "dnn": init_mlp(ks[2], [m * d, *cfg.mlp_dims, 1]),
+        "bias": jnp.zeros(()),
+    }
+    h_prev = m
+    for i, h in enumerate(cfg.cin_layers):
+        params["cin"].append(jax.random.normal(
+            jax.random.fold_in(ks[3], i), (h, h_prev, m),
+            jnp.float32) * ((h_prev * m) ** -0.5))
+        h_prev = h
+    params["cin_out"] = jax.random.normal(
+        ks[4], (sum(cfg.cin_layers),), jnp.float32) * 0.1
+    return params
+
+
+def embedding_bag(table: jax.Array, indices: jax.Array,
+                  weights: jax.Array | None = None) -> jax.Array:
+    """EmbeddingBag(sum) built from take + segment_sum.
+
+    indices: int32[B, F, V] global row ids (V values per multi-hot field,
+    -1 padding).  Returns [B, F, d].
+    """
+    B, F, V = indices.shape
+    flat = indices.reshape(-1)
+    valid = flat >= 0
+    rows = jnp.take(table, jnp.maximum(flat, 0), axis=0)
+    if weights is not None:
+        rows = rows * weights.reshape(-1, 1)
+    rows = jnp.where(valid[:, None], rows, 0.0)
+    seg = jnp.arange(B * F).repeat(V)
+    bagged = jax.ops.segment_sum(rows, seg, num_segments=B * F)
+    return bagged.reshape(B, F, table.shape[1])
+
+
+def forward(params, batch: dict, cfg: XDeepFMConfig):
+    """batch["indices"]: int32[B, F, V] -> logits [B]."""
+    idx = batch["indices"]
+    B = idx.shape[0]
+    x0 = embedding_bag(params["table"], idx)        # [B, F, d]
+
+    # linear term: sum of per-row weights
+    flat = idx.reshape(-1)
+    lin_rows = jnp.where(flat >= 0,
+                         jnp.take(params["linear"], jnp.maximum(flat, 0)),
+                         0.0)
+    linear = lin_rows.reshape(B, -1).sum(-1)
+
+    # CIN branch
+    xk = x0
+    cin_feats = []
+    for w in params["cin"]:
+        xk = kops.cin_layer(xk, x0, w, use_pallas=cfg.use_pallas_cin)
+        cin_feats.append(xk.sum(-1))                # sum-pool over d
+    cin_vec = jnp.concatenate(cin_feats, axis=-1)   # [B, sum(H)]
+    cin_logit = cin_vec @ params["cin_out"]
+
+    # DNN branch
+    dnn_logit = mlp(params["dnn"], x0.reshape(B, -1),
+                    act=jax.nn.relu)[:, 0]
+
+    return linear + cin_logit + dnn_logit + params["bias"]
+
+
+def loss_fn(params, batch: dict, cfg: XDeepFMConfig):
+    logits = forward(params, batch, cfg)
+    y = batch["labels"].astype(jnp.float32)
+    loss = jnp.mean(
+        jnp.maximum(logits, 0) - logits * y
+        + jnp.log1p(jnp.exp(-jnp.abs(logits))))     # stable BCE
+    acc = jnp.mean((logits > 0) == (y > 0.5))
+    return loss, {"acc": acc}
+
+
+def retrieval_scores(params, query_idx: jax.Array,
+                     cand_table: jax.Array, cfg: XDeepFMConfig):
+    """Score 1 query against N candidates with one batched matmul.
+
+    query_idx: int32[1, F, V] context features; cand_table: [N, d]
+    candidate embeddings.  Returns [N] scores — a single [N, d] @ [d]
+    product, NOT a loop (retrieval_cand cell).
+    """
+    q = embedding_bag(params["table"], query_idx)       # [1, F, d]
+    qv = q.mean(axis=1)[0]                              # [d]
+    return cand_table @ qv

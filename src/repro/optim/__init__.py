@@ -1,0 +1,5 @@
+from repro.optim.adamw import adamw_init, adamw_update  # noqa: F401
+from repro.optim.clip import clip_by_global_norm, global_norm  # noqa: F401
+from repro.optim.schedule import warmup_cosine  # noqa: F401
+from repro.optim.compress import (  # noqa: F401
+    compress_int8, decompress_int8, CompressedAllReduce)

@@ -1,0 +1,90 @@
+"""Serving runtime: batched prefill + decode with KV cache.
+
+`serve_step` (one token for a whole batch against a long cache) is the
+artifact the decode_* / long_* dry-run cells lower.  The interactive
+loop below (used by examples/serve_lm.py) adds greedy/temperature
+sampling and simple continuous batching over a request queue.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.transformer import (KVCache, LMConfig, decode_step,
+                                      init_cache)
+
+
+@dataclasses.dataclass
+class Request:
+    prompt: list[int]
+    max_new: int = 32
+    out: list[int] = dataclasses.field(default_factory=list)
+    done: bool = False
+
+
+def make_serve_step(cfg: LMConfig, hooks=None):
+    @jax.jit
+    def serve_step(params, cache: KVCache, token: jax.Array):
+        return decode_step(params, cache, token, cfg, hooks)
+    return serve_step
+
+
+def sample_token(logits: jax.Array, key, temperature: float = 0.0):
+    if temperature <= 0:
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    return jax.random.categorical(
+        key, logits / temperature, axis=-1).astype(jnp.int32)
+
+
+class BatchServer:
+    """Greedy continuous batching: fixed batch slots, each slot runs one
+    request; finished slots immediately take the next queued request
+    (their cache column restarts at pos... per-slot pos would need a
+    ragged cache — we restart the whole batch when all slots drain,
+    which is exact for the example workload and keeps the cache dense)."""
+
+    def __init__(self, params, cfg: LMConfig, batch: int, max_seq: int,
+                 temperature: float = 0.0, seed: int = 0):
+        self.params = params
+        self.cfg = cfg
+        self.batch = batch
+        self.max_seq = max_seq
+        self.temp = temperature
+        self.key = jax.random.PRNGKey(seed)
+        self.step_fn = make_serve_step(cfg)
+
+    def generate(self, requests: list[Request]) -> list[Request]:
+        for group_start in range(0, len(requests), self.batch):
+            group = requests[group_start: group_start + self.batch]
+            self._run_group(group)
+        return requests
+
+    def _run_group(self, group: list[Request]):
+        B = self.batch
+        cache = init_cache(self.cfg, B, self.max_seq)
+        max_prompt = max(len(r.prompt) for r in group)
+        # left-pad prompts to a rectangle; feed through decode steps
+        toks = np.zeros((B, max_prompt), np.int32)
+        for i, r in enumerate(group):
+            toks[i, max_prompt - len(r.prompt):] = r.prompt
+        logits = None
+        for t in range(max_prompt):
+            logits, cache = self.step_fn(
+                self.params, cache, jnp.asarray(toks[:, t]))
+        max_new = max(r.max_new for r in group)
+        cur = None
+        for _ in range(max_new):
+            self.key, sub = jax.random.split(self.key)
+            cur = sample_token(logits, sub, self.temp)
+            for i, r in enumerate(group):
+                if len(r.out) < r.max_new:
+                    r.out.append(int(cur[i]))
+                else:
+                    r.done = True
+            logits, cache = self.step_fn(self.params, cache, cur)
+        for r in group:
+            r.done = True

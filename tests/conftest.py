@@ -1,0 +1,23 @@
+"""Shared fixtures.  NOTE: no XLA device-count override here — smoke
+tests and benches must see the real single CPU device (the dry-run sets
+its own flag in its own process)."""
+import numpy as np
+import pytest
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return np.random.default_rng(0)
+
+
+def dijkstra_expected(hg, source=0):
+    from repro.core.sssp.reference import dijkstra
+    return dijkstra(hg, source).dist
+
+
+def assert_dist_equal(got, expected, rtol=1e-5, atol=1e-4):
+    got = np.asarray(got, np.float64)
+    expected = np.asarray(expected, np.float64)
+    g = np.where(np.isinf(got), 1e18, got)
+    e = np.where(np.isinf(expected), 1e18, expected)
+    np.testing.assert_allclose(g, e, rtol=rtol, atol=atol)

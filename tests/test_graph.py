@@ -1,0 +1,77 @@
+"""Graph containers: build, padding, segment ops, ELL form."""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.core import generators as gen
+from repro.core.graph import HostGraph, build_ell, build_graph
+
+
+def test_build_graph_padding_and_derived():
+    src = np.array([0, 0, 1, 2])
+    dst = np.array([1, 2, 2, 0])
+    w = np.array([1.0, 2.0, 0.5, 3.0], np.float32)
+    g = build_graph(3, src, dst, w, edge_pad_multiple=8)
+    assert g.e_pad == 8 and g.e == 4
+    assert np.asarray(g.src)[4:].tolist() == [3] * 4  # sentinel
+    assert np.isinf(np.asarray(g.w)[4:]).all()
+    np.testing.assert_array_equal(np.asarray(g.in_deg), [1, 1, 2])
+    np.testing.assert_array_equal(np.asarray(g.out_deg), [2, 1, 1])
+    np.testing.assert_allclose(np.asarray(g.in_weight), [3.0, 1.0, 0.5])
+    np.testing.assert_allclose(np.asarray(g.out_weight), [1.0, 0.5, 3.0])
+    # dst-sorted
+    d = np.asarray(g.dst)[:4]
+    assert (np.diff(d) >= 0).all()
+
+
+def test_segment_ops_vs_numpy():
+    n, src, dst, w = gen.gnp(100, seed=0)
+    g = build_graph(n, src, dst, w)
+    vals = np.asarray(g.w).copy()
+    got = np.asarray(g.seg_min_at_dst(jnp.asarray(vals)))
+    exp = np.full(n, np.inf, np.float32)
+    np.minimum.at(exp, dst, w)
+    # padding rows were inf already
+    srt = np.argsort(dst, kind="stable")
+    np.testing.assert_allclose(got, exp)
+
+
+def test_gather_src_sentinel_fill():
+    src = np.array([0, 1])
+    dst = np.array([1, 0])
+    g = build_graph(2, src, dst, np.ones(2, np.float32),
+                    edge_pad_multiple=4)
+    vals = jnp.asarray([10.0, 20.0])
+    out = np.asarray(g.gather_src(vals, fill=-1.0))
+    assert out[2:].tolist() == [-1.0, -1.0]
+
+
+def test_ell_matches_edges():
+    n, src, dst, w = gen.gnp(64, seed=1)
+    hg = HostGraph(n, src, dst, w)
+    ell = hg.to_ell()
+    in_src = np.asarray(ell.in_src)
+    in_w = np.asarray(ell.in_w)
+    for v in range(n):
+        expected = sorted((s, float(ww)) for s, ww in hg.inn[v])
+        got = sorted((int(s), float(ww))
+                     for s, ww in zip(in_src[v], in_w[v]) if s < n)
+        assert got == expected
+
+
+def test_strictly_positive_weights_enforced():
+    with pytest.raises(AssertionError):
+        build_graph(2, [0], [1], [0.0])
+    with pytest.raises(AssertionError):
+        build_graph(2, [0], [0], [1.0])  # self loop
+
+
+@pytest.mark.parametrize("family", list(gen.FAMILIES))
+def test_generators_valid(family):
+    n, src, dst, w = gen.make(family, 200, seed=0)
+    assert (w > 0).all()
+    assert (src != dst).all()
+    assert src.max() < n and dst.max() < n
+    # no duplicate edges
+    key = src.astype(np.int64) * n + dst
+    assert len(np.unique(key)) == len(key)

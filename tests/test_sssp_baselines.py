@@ -1,0 +1,64 @@
+"""Bellman-Ford / delta-stepping baselines + parent-pointer extraction."""
+import numpy as np
+import pytest
+
+from conftest import assert_dist_equal
+from repro.core import generators as gen
+from repro.core.graph import HostGraph
+from repro.core.sssp.bellman_ford import run_bellman_ford
+from repro.core.sssp.delta_stepping import run_delta_stepping
+from repro.core.sssp.engine import SP4_CONFIG, run_sssp
+from repro.core.sssp.parents import extract_path, parent_pointers
+from repro.core.sssp.reference import dijkstra
+
+
+@pytest.mark.parametrize("family", ["gnp", "grid", "chain"])
+def test_bellman_ford(family):
+    n, src, dst, w = gen.make(family, 250, seed=0)
+    hg = HostGraph(n, src, dst, w)
+    res = run_bellman_ford(hg.to_device())
+    assert_dist_equal(res.dist, dijkstra(hg).dist)
+
+
+@pytest.mark.parametrize("delta", [0.1, 0.3, 1.0, 100.0])
+def test_delta_stepping(delta):
+    n, src, dst, w = gen.gnp(250, seed=1)
+    hg = HostGraph(n, src, dst, w)
+    res = run_delta_stepping(hg.to_device(), delta=delta)
+    assert_dist_equal(res.dist, dijkstra(hg).dist)
+
+
+def test_delta_extremes_match_paper_remark():
+    """delta=inf ~ Bellman-Ford (few phases); small delta ~ Dijkstra
+    (many phases) — Meyer-Sanders trade-off."""
+    n, src, dst, w = gen.gnp(300, seed=2)
+    g = HostGraph(n, src, dst, w).to_device()
+    big = run_delta_stepping(g, delta=1e9)
+    small = run_delta_stepping(g, delta=0.05)
+    assert big.phases <= 3
+    assert small.phases > big.phases
+
+
+def test_parent_pointers_form_shortest_tree():
+    n, src, dst, w = gen.gnp(300, seed=3)
+    hg = HostGraph(n, src, dst, w)
+    g = hg.to_device()
+    res = run_sssp(g, 0, SP4_CONFIG)
+    par = np.asarray(parent_pointers(g, res.dist))
+    dist = np.asarray(res.dist, np.float64)
+    # walk every reachable vertex back to the source
+    n_checked = 0
+    for v in range(n):
+        if np.isinf(dist[v]) or v == 0:
+            continue
+        path = extract_path(par, v)
+        assert path is not None and path[0] == 0 and path[-1] == v
+        # path cost telescopes to dist[v]
+        cost = 0.0
+        wmap = {(int(s), int(d)): float(ww)
+                for s, d, ww in zip(hg.src, hg.dst, hg.w)}
+        for a, b in zip(path, path[1:]):
+            cost += wmap[(a, b)]
+        assert abs(cost - dist[v]) < 1e-3 * (1 + dist[v])
+        n_checked += 1
+    assert n_checked > 50

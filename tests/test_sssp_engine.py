@@ -1,0 +1,103 @@
+"""The JAX bulk-synchronous engine: correctness, invariants, dominance."""
+import numpy as np
+import pytest
+
+from conftest import assert_dist_equal
+from repro.core import generators as gen
+from repro.core.graph import HostGraph
+from repro.core.sssp.engine import (SP1_RULES, SP2_RULES, SP3_CONFIG,
+                                    SP3_RULES, SP4_CONFIG, SSSPConfig,
+                                    run_sssp, run_sssp_ell,
+                                    run_sssp_traced)
+from repro.core.sssp.reference import dijkstra
+
+FAMILIES = ["gnp", "dag", "unweighted", "grid", "power_law", "chain"]
+CONFIGS = {
+    "sp1": SSSPConfig(rules=SP1_RULES),
+    "sp2": SSSPConfig(rules=SP2_RULES),
+    "sp3": SP3_CONFIG,
+    "sp4": SP4_CONFIG,
+    "sp4_cprop4": SSSPConfig(rules=SP3_RULES, label_correcting=True,
+                             c_prop_iters=4),
+    "out_only": SSSPConfig(rules=frozenset({"out"})),
+    "min_only": SSSPConfig(rules=frozenset({"min"})),
+}
+
+
+@pytest.mark.parametrize("family", FAMILIES)
+@pytest.mark.parametrize("name", list(CONFIGS))
+def test_engine_matches_dijkstra(family, name):
+    n, src, dst, w = gen.make(family, 250, seed=3)
+    hg = HostGraph(n, src, dst, w)
+    expected = dijkstra(hg).dist
+    res = run_sssp(hg.to_device(), 0, CONFIGS[name])
+    assert_dist_equal(res.dist, expected)
+
+
+def test_invariants_every_round():
+    """C <= cost <= D at every round; C monotone up, D monotone down."""
+    n, src, dst, w = gen.gnp(200, seed=7)
+    hg = HostGraph(n, src, dst, w)
+    cost = dijkstra(hg).dist
+    res = run_sssp_traced(hg.to_device(), 0, SP4_CONFIG)
+    costs = np.where(np.isinf(cost), np.inf, cost)
+    for t in res.trace:
+        assert (t["C"] <= costs + 1e-4).all(), "C must lower-bound cost"
+        assert (costs <= t["D"] + 1e-3).all() or np.isinf(costs).any()
+        assert (t["C"] >= t["prev_C"] - 1e-6).all()
+        assert (t["D"] <= t["prev_D"] + 1e-6).all()
+
+
+def test_rule_dominance_theorem4():
+    """Theorem 4: SP3's rule set fixes every vertex SP2 does, no later.
+    Bulk-synchronous reading: rounds(sp3) <= rounds(sp2) <= rounds(sp1)."""
+    for family in ("gnp", "grid", "chain"):
+        n, src, dst, w = gen.make(family, 250, seed=1)
+        g = HostGraph(n, src, dst, w).to_device()
+        r1 = run_sssp(g, 0, CONFIGS["sp1"]).rounds
+        r2 = run_sssp(g, 0, CONFIGS["sp2"]).rounds
+        r3 = run_sssp(g, 0, CONFIGS["sp3"]).rounds
+        assert r3 <= r2 <= r1
+
+
+def test_more_cprop_iters_never_slower():
+    n, src, dst, w = gen.geometric(300, seed=2)
+    g = HostGraph(n, src, dst, w).to_device()
+    r1 = run_sssp(g, 0, SP4_CONFIG).rounds
+    r4 = run_sssp(g, 0, CONFIGS["sp4_cprop4"]).rounds
+    assert r4 <= r1
+
+
+def test_rounds_headroom_vs_dijkstra():
+    """The headline claim: rounds-to-fixpoint collapses vs n."""
+    n, src, dst, w = gen.gnp(500, seed=0)
+    g = HostGraph(n, src, dst, w).to_device()
+    res = run_sssp(g, 0, SP4_CONFIG)
+    assert res.rounds < 25  # Dijkstra needs ~500
+
+
+def test_fixed_by_attribution_sums():
+    n, src, dst, w = gen.gnp(300, seed=4)
+    g = HostGraph(n, src, dst, w).to_device()
+    res = run_sssp(g, 0, SP4_CONFIG)
+    n_fixed = int(np.asarray(res.fixed).sum())
+    assert sum(res.fixed_by.values()) == n_fixed
+
+
+@pytest.mark.parametrize("use_pallas", [False, True])
+def test_ell_engine_path(use_pallas):
+    n, src, dst, w = gen.gnp(200, seed=5)
+    hg = HostGraph(n, src, dst, w)
+    expected = dijkstra(hg).dist
+    cfg = SSSPConfig(rules=SP3_RULES, label_correcting=True,
+                     use_pallas=use_pallas)
+    res = run_sssp_ell(hg.to_device(), hg.to_ell(), 0, cfg)
+    assert_dist_equal(res.dist, expected)
+
+
+def test_source_nonzero():
+    n, src, dst, w = gen.gnp(150, seed=6)
+    hg = HostGraph(n, src, dst, w)
+    expected = dijkstra(hg, source=7).dist
+    res = run_sssp(hg.to_device(), 7, SP4_CONFIG)
+    assert_dist_equal(res.dist, expected)

@@ -1,0 +1,71 @@
+"""Hypothesis property tests: the engine's invariants on arbitrary
+strictly-positive-weight digraphs."""
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from conftest import assert_dist_equal
+from repro.core.graph import HostGraph, build_graph
+from repro.core.sssp.engine import (SP4_CONFIG, SP3_CONFIG, run_sssp,
+                                    run_sssp_traced)
+from repro.core.sssp.reference import dijkstra, sp1, sp2, sp3
+
+
+@st.composite
+def digraphs(draw, max_n=40, max_e=160):
+    n = draw(st.integers(3, max_n))
+    e = draw(st.integers(1, max_e))
+    src = draw(st.lists(st.integers(0, n - 1), min_size=e, max_size=e))
+    dst = draw(st.lists(st.integers(0, n - 1), min_size=e, max_size=e))
+    w = draw(st.lists(
+        st.floats(0.05, 50.0, allow_nan=False, allow_infinity=False),
+        min_size=e, max_size=e))
+    keep = [(s, d, ww) for s, d, ww in zip(src, dst, w) if s != d]
+    seen, out = set(), []
+    for s, d, ww in keep:
+        if (s, d) not in seen:
+            seen.add((s, d))
+            out.append((s, d, np.float32(ww)))
+    if not out:
+        out = [(0, 1, np.float32(1.0))]
+    s, d, w = (np.array(x) for x in zip(*out))
+    return n, s, d, w.astype(np.float32)
+
+
+@given(digraphs())
+@settings(max_examples=60, deadline=None)
+def test_all_reference_algos_agree(g):
+    n, src, dst, w = g
+    hg = HostGraph(n, src, dst, w)
+    expected = dijkstra(hg).dist
+    for algo in (sp1, sp2, sp3):
+        assert_dist_equal(algo(hg).dist, expected)
+
+
+@given(digraphs())
+@settings(max_examples=40, deadline=None)
+def test_engine_agrees_with_dijkstra(g):
+    n, src, dst, w = g
+    hg = HostGraph(n, src, dst, w)
+    expected = dijkstra(hg).dist
+    dev = build_graph(n, src, dst, w, edge_pad_multiple=32)
+    for cfg in (SP3_CONFIG, SP4_CONFIG):
+        assert_dist_equal(run_sssp(dev, 0, cfg).dist, expected)
+
+
+@given(digraphs(max_n=25, max_e=80))
+@settings(max_examples=25, deadline=None)
+def test_bounds_invariant_holds(g):
+    """At every round: C[x] <= cost[x] <= D[x] (the paper's invariant)."""
+    n, src, dst, w = g
+    hg = HostGraph(n, src, dst, w)
+    cost = dijkstra(hg).dist
+    costs = np.where(np.isinf(cost), np.inf, cost)
+    res = run_sssp_traced(
+        build_graph(n, src, dst, w, edge_pad_multiple=32), 0, SP4_CONFIG)
+    for t in res.trace:
+        assert (t["C"] <= costs + 1e-3).all()
+        finite = ~np.isinf(costs)
+        assert (costs[finite] <= t["D"][finite] + 1e-3).all()
+    # termination: every reachable vertex fixed with D == cost
+    fixed = np.asarray(res.fixed)
+    assert (fixed == ~np.isinf(costs)).all()

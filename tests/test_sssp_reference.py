@@ -1,0 +1,101 @@
+"""Sequential reference algorithms vs networkx + the paper's claims."""
+import networkx as nx
+import numpy as np
+import pytest
+
+from conftest import assert_dist_equal
+from repro.core import generators as gen
+from repro.core.graph import HostGraph
+from repro.core.sssp.reference import dijkstra, sp1, sp2, sp3
+
+FAMILIES = ["gnp", "dag", "unweighted", "grid", "power_law", "chain",
+            "geometric"]
+ALGOS = {"dijkstra": dijkstra, "sp1": sp1, "sp2": sp2, "sp3": sp3}
+
+
+def nx_expected(n, src, dst, w, source=0):
+    G = nx.DiGraph()
+    G.add_nodes_from(range(n))
+    for s, d, ww in zip(src, dst, w):
+        G.add_edge(int(s), int(d), weight=float(ww))
+    ref = nx.single_source_dijkstra_path_length(G, source)
+    out = np.full(n, np.inf)
+    for v, c in ref.items():
+        out[v] = c
+    return out
+
+
+@pytest.mark.parametrize("family", FAMILIES)
+@pytest.mark.parametrize("algo", list(ALGOS))
+def test_correct_vs_networkx(family, algo):
+    for seed in range(2):
+        n, src, dst, w = gen.make(family, 250, seed=seed)
+        hg = HostGraph(n, src, dst, w)
+        expected = nx_expected(n, src, dst, w)
+        got = ALGOS[algo](hg).dist
+        assert_dist_equal(got, expected)
+
+
+@pytest.mark.parametrize("family", FAMILIES)
+def test_sp1_sp2_fewer_heap_ops_than_dijkstra(family):
+    """The paper's core sequential claim (§I, §III, §IV)."""
+    n, src, dst, w = gen.make(family, 300, seed=1)
+    hg = HostGraph(n, src, dst, w)
+    d = dijkstra(hg).heap_ops
+    assert sp1(hg).heap_ops <= d
+    assert sp2(hg).heap_ops <= sp1(hg).heap_ops + 2  # sp2 <= sp1 modulo ties
+
+
+def test_dag_single_round_theorem2():
+    """Theorem 2: on a DAG whose only zero-in-degree vertex is the
+    source, SP1 explores everything in ONE outer round, O(e)."""
+    for seed in range(3):
+        n, src, dst, w = gen.dag(300, seed=seed)
+        hg = HostGraph(n, src, dst, w)
+        r = sp1(hg)
+        assert r.stats["rounds"] == 1
+        # each edge relaxed exactly once
+        assert r.stats["edges_relaxed"] == hg.e
+        # no heap traffic beyond the source insert/remove
+        assert r.heap_ops <= 2
+
+
+def test_unweighted_bfs_theorem3():
+    """Theorem 3: SP2 on unweighted graphs degenerates to BFS — heap
+    operations collapse vs Dijkstra."""
+    n, src, dst, w = gen.unweighted(400, seed=0)
+    hg = HostGraph(n, src, dst, w)
+    d = dijkstra(hg)
+    r = sp2(hg)
+    assert r.heap_ops < d.heap_ops / 2
+    assert r.stats["rounds"] < d.stats["rounds"] / 10
+
+
+def test_sp3_rounds_collapse():
+    """SP3's lower bounds fix many vertices per round (the paper's
+    parallelism claim): rounds ~ orders of magnitude below Dijkstra."""
+    n, src, dst, w = gen.gnp(400, seed=0)
+    hg = HostGraph(n, src, dst, w)
+    assert sp3(hg).stats["rounds"] <= dijkstra(hg).stats["rounds"] / 20
+
+
+def test_frontier_growth_monotone():
+    """max |R| (available parallelism) grows SP1 <= SP2 <= SP3."""
+    n, src, dst, w = gen.power_law(400, seed=0)
+    hg = HostGraph(n, src, dst, w)
+    f1 = sp1(hg).stats["max_frontier"]
+    f2 = sp2(hg).stats["max_frontier"]
+    f3 = sp3(hg).stats["max_frontier"]
+    assert f1 <= f2 * 2 and f2 <= f3 * 2  # allow tie-break slack
+
+
+def test_unreachable_vertices_inf():
+    # two disconnected components
+    src = np.array([0, 1, 3])
+    dst = np.array([1, 2, 4])
+    w = np.ones(3, np.float32)
+    hg = HostGraph(5, src, dst, w)
+    for algo in ALGOS.values():
+        dist = algo(hg).dist
+        assert np.isinf(dist[3]) and np.isinf(dist[4])
+        assert dist[2] == 2.0
