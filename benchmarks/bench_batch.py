@@ -1,0 +1,124 @@
+"""Batched multi-source SSSP throughput: the amortization claim.
+
+Measures queries/sec for k sources answered (a) one compiled solve at a
+time through the Solver (no retrace, but k program executions) and
+(b) as one vmapped ``solve_batch`` execution, plus (c) the serving path
+(`runtime/sssp_service.SSSPService`) with a repeated-source query mix.
+
+Each invocation appends its rows to the BENCH json trajectory
+(``experiments/bench/batch_qps.json``) so successive PRs accumulate a
+queries/sec history on fixed workloads.
+
+  python -m benchmarks.bench_batch [--smoke]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+import numpy as np
+
+BENCH_JSON = os.path.join("experiments", "bench", "batch_qps.json")
+
+
+def _time(fn, reps=3):
+    fn()  # compile
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        fn()
+    return (time.perf_counter() - t0) / reps
+
+
+def run(n: int = 2000, batch: int = 16, families=("gnp", "grid"),
+        backend: str = "segment", reps: int = 3) -> list[dict]:
+    import jax
+    from repro.core import generators as gen
+    from repro.core.graph import HostGraph
+    from repro.core.sssp.solver import Solver
+    from repro.runtime.sssp_service import Query, SSSPService
+
+    rows = []
+    for family in families:
+        nn, src, dst, w = gen.make(family, n, seed=0)
+        hg = HostGraph(nn, src, dst, w)
+        g = hg.to_device()
+        rng = np.random.default_rng(0)
+        sources = rng.choice(nn, size=batch, replace=False).astype(np.int32)
+
+        solver = Solver(g, backend=backend)
+
+        def loop_solve():
+            for s in sources:
+                jax.block_until_ready(solver.solve(int(s)).dist)
+
+        def batch_solve():
+            jax.block_until_ready(solver.solve_batch(sources).dist)
+
+        t_loop = _time(loop_solve, reps)
+        t_batch = _time(batch_solve, reps)
+
+        # serving path: hot-source query mix, cache soaks up repeats
+        service = SSSPService(g, backend=backend, batch=min(batch, 8))
+        # warm up compilation on sources OUTSIDE the hot pool below, so
+        # the recorded trajectory measures serving (solve + cache), not
+        # the first XLA compile — and not pure cache lookups either
+        service.serve([Query(source=int(s), target=0)
+                       for s in sources[max(batch // 2, 1):]] or
+                      [Query(source=int(sources[-1]), target=0)])
+        queries = [Query(source=int(rng.choice(sources[: max(batch // 2, 1)])),
+                         target=int(rng.integers(0, nn)))
+                   for _ in range(4 * batch)]
+        t0 = time.perf_counter()
+        service.serve(queries)
+        t_serve = time.perf_counter() - t0
+
+        rows.append({
+            "family": family, "n": nn, "e": hg.e, "backend": backend,
+            "batch": batch,
+            "qps_loop": round(batch / t_loop, 2),
+            "qps_batch": round(batch / t_batch, 2),
+            "batch_speedup": round(t_loop / t_batch, 2),
+            "qps_serve": round(len(queries) / t_serve, 2),
+            "cache_hits": service.stats["cache_hits"],
+            "traces": solver.trace_count,
+        })
+    return rows
+
+
+def record(rows: list[dict], path: str = BENCH_JSON) -> None:
+    """Append this run's rows to the json trajectory (list of runs)."""
+    os.makedirs(os.path.dirname(path), exist_ok=True)
+    traj = []
+    if os.path.exists(path):
+        with open(path) as f:
+            traj = json.load(f)
+    traj.append({"ts": time.strftime("%Y-%m-%dT%H:%M:%S"), "rows": rows})
+    with open(path, "w") as f:
+        json.dump(traj, f, indent=1)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="small sizes, single rep (CI)")
+    ap.add_argument("--n", type=int, default=None)
+    ap.add_argument("--batch", type=int, default=None)
+    ap.add_argument("--backend", default="segment")
+    ap.add_argument("--no-record", action="store_true")
+    args = ap.parse_args()
+
+    n = args.n or (400 if args.smoke else 2000)
+    batch = args.batch or (8 if args.smoke else 16)
+    reps = 1 if args.smoke else 3
+    rows = run(n=n, batch=batch, backend=args.backend, reps=reps)
+    for r in rows:
+        print(r)
+    if not args.no_record:
+        record(rows)
+        print(f"appended to {BENCH_JSON}")
+
+
+if __name__ == "__main__":
+    main()

@@ -5,6 +5,7 @@
                       Crauser in/out comparison (§V/§VI, Thm 4, Lem 9)
   bench_optimality  — Thm 2 (DAG O(e)) and Thm 3 (unweighted BFS)
   bench_throughput  — engine vs Bellman-Ford vs delta-stepping (CPU)
+  bench_batch       — batched multi-source Solver + serving queries/sec
   bench_kernels     — kernel microbench (jnp path)
 
 ``python -m benchmarks.run [--quick]`` prints CSV blocks per bench.
@@ -37,7 +38,7 @@ def main() -> None:
     ap.add_argument("--only", default=None)
     args = ap.parse_args()
 
-    from benchmarks import (bench_heap_ops, bench_kernels,
+    from benchmarks import (bench_batch, bench_heap_ops, bench_kernels,
                             bench_optimality, bench_rounds,
                             bench_throughput)
 
@@ -49,6 +50,9 @@ def main() -> None:
         "optimality": lambda: bench_optimality.run(
             n=900 if args.quick else 3000),
         "throughput": lambda: bench_throughput.run(sizes=sizes),
+        "batch": lambda: bench_batch.run(
+            n=400 if args.quick else 2000, batch=8 if args.quick else 16,
+            reps=1 if args.quick else 3),
         "kernels": bench_kernels.run,
     }
     t_all = time.time()

@@ -30,8 +30,7 @@ def main():
     from jax.sharding import Mesh
     from repro.core import generators as gen
     from repro.core.graph import HostGraph
-    from repro.core.sssp.distributed import run_sssp_distributed
-    from repro.core.sssp.engine import SP4_CONFIG, run_sssp
+    from repro.sssp import SP4_CONFIG, Solver
 
     print(f"devices: {len(jax.devices())}")
     n, src, dst, w = gen.gnp(args.n, avg_deg=args.deg, seed=0)
@@ -41,21 +40,24 @@ def main():
 
     mesh = Mesh(np.asarray(jax.devices()).reshape(2, 4),
                 ("data", "model"))
+    sharded = Solver(g, SP4_CONFIG, backend="distributed",
+                     mesh=mesh, axes=("data", "model"))
     t0 = time.time()
-    D, C, fixed, rounds = run_sssp_distributed(
-        g, 0, SP4_CONFIG, mesh, axes=("data", "model"))
+    res = sharded.solve(0)
+    D = res.dist
     jax.block_until_ready(D)
     t_dist = time.time() - t0
 
+    local = Solver(g, SP4_CONFIG)
     t0 = time.time()
-    single = run_sssp(g, 0, SP4_CONFIG)
+    single = local.solve(0)
     jax.block_until_ready(single.dist)
     t_single = time.time() - t0
 
     assert np.array_equal(np.asarray(single.dist), np.asarray(D)), \
         "distributed must be bitwise identical (min is associative)"
     reach = int(np.isfinite(np.asarray(D)).sum())
-    print(f"rounds={int(rounds)}  reachable={reach}/{n}")
+    print(f"rounds={res.rounds}  reachable={reach}/{n}")
     print(f"single-device {t_single*1e3:.0f} ms | "
           f"8-device sharded {t_dist*1e3:.0f} ms "
           f"(CPU collectives; TPU scaling comes from the dry-run)")

@@ -15,7 +15,7 @@ def main():
     import jax
     import jax.numpy as jnp
     from repro.core.graph import HostGraph
-    from repro.core.sssp.engine import SP4_CONFIG, run_sssp
+    from repro.sssp import SP4_CONFIG, Solver
     from repro.data.synthetic import cora_like
     from repro.models.gnn import gat
     from repro.models.gnn.layers import build_batch
@@ -24,18 +24,17 @@ def main():
     hg = HostGraph(n, src, dst, np.ones(len(src), np.float32))
     g = hg.to_device()
 
-    # SP4 distances from 8 landmarks (one engine run each; each takes a
-    # handful of bulk-synchronous rounds — BFS via Theorem 3)
+    # SP4 distances from 8 landmarks: ONE batched solve (the landmark
+    # axis is a vmapped traced source; each source takes a handful of
+    # bulk-synchronous rounds — BFS via Theorem 3)
     rng = np.random.default_rng(0)
     landmarks = rng.choice(n, 8, replace=False)
-    feats = []
-    for lm in landmarks:
-        res = run_sssp(g, int(lm), SP4_CONFIG)
-        d = np.asarray(res.dist)
-        d = np.where(np.isinf(d), 20.0, d)  # unreachable -> large
-        feats.append(d / 10.0)
-        print(f"  landmark {lm}: engine rounds={res.rounds}")
-    dist_feats = np.stack(feats, axis=1).astype(np.float32)
+    batch = Solver(g, SP4_CONFIG).solve_batch(landmarks)
+    d = np.asarray(batch.dist)                 # [8, n]
+    d = np.where(np.isinf(d), 20.0, d)         # unreachable -> large
+    dist_feats = (d / 10.0).T.astype(np.float32)
+    for lm, r in zip(landmarks, batch.rounds):
+        print(f"  landmark {lm}: engine rounds={int(r)}")
 
     def train(features, tag):
         batch = build_batch(n, src, dst, features, y)

@@ -17,7 +17,6 @@ materialized on this host.
 from __future__ import annotations
 
 import dataclasses
-from functools import partial
 
 import jax
 import jax.numpy as jnp
@@ -26,8 +25,8 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 from repro.configs import ArchSpec, register
 from repro.configs.cells import Cell
 from repro.core.graph import Graph
-from repro.core.sssp.engine import (SP4_CONFIG, SSSPConfig, _cond,
-                                    _init_state, _round)
+from repro.core.sssp.backends import distributed_prims
+from repro.core.sssp.engine import SP4_CONFIG, SSSPConfig, _solve
 from repro.distributed.mesh import data_axes
 
 SHAPES = {
@@ -58,35 +57,9 @@ def build_cell(cfg: SSSPConfig, shape: str) -> Cell:
             lg = Graph(n=n, e=e, e_pad=e_loc, src=src, dst=dst, w=w,
                        in_deg=zeros, out_deg=zeros, in_weight=zeros,
                        out_weight=out_weight)
-
-            def smin(ev):
-                loc = jax.ops.segment_min(
-                    ev, lg.dst, num_segments=lg.num_segments,
-                    indices_are_sorted=True)[: lg.n]
-                return jax.lax.pmin(loc, axes)
-
-            def smax(ev):
-                loc = jax.ops.segment_max(
-                    ev, lg.dst, num_segments=lg.num_segments,
-                    indices_are_sorted=True)[: lg.n]
-                return jax.lax.pmax(loc, axes)
-
-            def smin2(ev_a, ev_b):
-                la = jax.ops.segment_min(
-                    ev_a, lg.dst, num_segments=lg.num_segments,
-                    indices_are_sorted=True)[: lg.n]
-                lb = jax.ops.segment_min(
-                    ev_b, lg.dst, num_segments=lg.num_segments,
-                    indices_are_sorted=True)[: lg.n]
-                both = jax.lax.pmin(jnp.stack([la, lb]), axes)
-                return both[0], both[1]
-
-            state = _init_state(lg, 0)
-            state = jax.lax.while_loop(
-                lambda s: _cond(s, max_rounds),
-                lambda s: _round(lg, cfg, s, seg_min=smin, seg_max=smax,
-                                 seg_min2=smin2),
-                state)
+            run_cfg = dataclasses.replace(cfg, max_rounds=max_rounds)
+            state = _solve(lg, run_cfg, 0,
+                           prims=distributed_prims(lg, axes))
             return state.D, state.C, state.round
 
         fn = shard_map(

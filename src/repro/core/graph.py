@@ -132,6 +132,7 @@ def build_graph(n: int, src, dst, w, *, edge_pad_multiple: int = 128) -> Graph:
     )
 
 
+@jax.tree_util.register_dataclass
 @dataclasses.dataclass(frozen=True)
 class EllGraph:
     """Dense padded in-neighbour (ELL) form for the Pallas relax kernel.
@@ -140,11 +141,14 @@ class EllGraph:
     ``in_w[i, j]`` the corresponding weight (or +inf).  Rows are padded to
     ``deg_pad`` (multiple of 128 lanes) and vertices to ``n_pad`` (multiple
     of 8 sublanes) so blocks tile the TPU VPU exactly.
+
+    Registered as a pytree (sizes static) so the ELL engine backend runs
+    inside ``jit``/``lax.while_loop`` like every other backend.
     """
 
-    n: int
-    n_pad: int
-    deg_pad: int
+    n: int = dataclasses.field(metadata=dict(static=True))
+    n_pad: int = dataclasses.field(metadata=dict(static=True))
+    deg_pad: int = dataclasses.field(metadata=dict(static=True))
     in_src: jax.Array  # int32[n_pad, deg_pad]
     in_w: jax.Array    # float32[n_pad, deg_pad]
 

@@ -1,5 +1,8 @@
 from repro.core.sssp.reference import (  # noqa: F401
     dijkstra, sp1, sp2, sp3, RefResult)
 from repro.core.sssp.engine import (  # noqa: F401
-    SSSPConfig, SSSPResult, run_sssp, run_sssp_traced,
+    SSSPConfig, SSSPResult, run_sssp, run_sssp_ell, run_sssp_traced,
     SP1_RULES, SP2_RULES, SP3_RULES, SP4_CONFIG, SP3_CONFIG)
+from repro.core.sssp.backends import Primitives  # noqa: F401
+from repro.core.sssp.solver import (  # noqa: F401
+    BACKENDS, Solver, SSSPBatchResult)

@@ -1,0 +1,125 @@
+"""Backend primitives: the protocol that makes every execution path one
+program.
+
+The engine's round body (engine._round) is written once against four
+vertex-level primitives; a *backend* is nothing but a concrete choice of
+these four.  This is the engine's own SP1–SP4-as-configurations
+philosophy applied to execution substrates: segment ops over the
+dst-sorted edge list, the dense ELL layout (jnp oracle or Pallas
+kernels), and the edge-sharded ``shard_map`` mesh are *instances* of the
+same round, not copies of it.
+
+    relax(x, src_mask)      -> float32[n]
+        min over in-edges (u, v, w) with src_mask[u] of x[u] + w,
+        reduced at v (INF where no participating in-edge).  This is the
+        paper's concurrent-min relaxation and also computes inWeight_nf
+        (x = 0) and the Eqn-(1) C-propagation (x = C, mask = all).
+    in_weight_nf(nf_mask)   -> float32[n]
+        min in-edge weight over edges whose source is in nf_mask —
+        semantically relax(zeros, nf_mask); backends may specialize.
+    relax2(x, src_mask, nf_mask) -> (relax(x, src_mask),
+                                     in_weight_nf(nf_mask))
+        optional fusion hook: both reductions depend only on round-start
+        state, so a backend may fuse them (the distributed backend stacks
+        them into ONE pmin all-reduce, halving per-round collective
+        launches).  ``None`` means "run them separately".
+    masked_min(x, mask)     -> float32 scalar
+        global min over masked vertices (the heap minimum of SP1–SP3).
+
+All primitives take and return *vertex* arrays; edge-layout details
+(gathers, segment ids, ELL padding, shard partitions) live entirely
+behind this line.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.graph import EllGraph, Graph, INF
+
+
+@dataclasses.dataclass(frozen=True)
+class Primitives:
+    """The four ops one SSSP round needs (see module docstring)."""
+
+    relax: Callable[[jax.Array, jax.Array], jax.Array]
+    in_weight_nf: Callable[[jax.Array], jax.Array]
+    masked_min: Callable[[jax.Array, jax.Array], jax.Array]
+    relax2: Callable | None = None  # optional fused (relax, in_weight_nf)
+
+
+def _masked_min_local(x: jax.Array, mask: jax.Array) -> jax.Array:
+    return jnp.min(jnp.where(mask, x, INF))
+
+
+def segment_prims(g: Graph) -> Primitives:
+    """Segment reductions over the dst-sorted edge list (the default)."""
+
+    def relax(x, src_mask):
+        ok = g.gather_src(src_mask, fill=False)
+        cand = jnp.where(ok, g.gather_src(x) + g.w, INF)
+        return g.seg_min_at_dst(cand)
+
+    def in_weight_nf(nf_mask):
+        ok = g.gather_src(nf_mask, fill=False)
+        return g.seg_min_at_dst(jnp.where(ok, g.w, INF))
+
+    return Primitives(relax=relax, in_weight_nf=in_weight_nf,
+                      masked_min=_masked_min_local)
+
+
+def ell_prims(g: Graph, ell: EllGraph, use_pallas: bool) -> Primitives:
+    """Dense padded in-neighbour (ELL) layout.
+
+    Every reduction is one call of the fused relax kernel (row-min over
+    the in-neighbourhood of x[src]+w, masked); ``use_pallas=True`` routes
+    through the Pallas TPU kernels (kernels/relax.py, segment_min.py),
+    otherwise the jnp oracle — same protocol either way.
+    """
+    from repro.kernels import ops
+
+    zeros = jnp.zeros((g.n,), jnp.float32)
+
+    def relax(x, src_mask):
+        return ops.relax_ell(x, ell, src_mask, use_pallas=use_pallas)
+
+    def in_weight_nf(nf_mask):
+        return ops.relax_ell(zeros, ell, nf_mask, use_pallas=use_pallas)
+
+    def masked_min(x, mask):
+        return ops.masked_min(x, mask, use_pallas=use_pallas)
+
+    return Primitives(relax=relax, in_weight_nf=in_weight_nf,
+                      masked_min=masked_min)
+
+
+def distributed_prims(lg: Graph, axes: tuple[str, ...]) -> Primitives:
+    """Edge-sharded segment reductions inside a ``shard_map`` body.
+
+    ``lg`` is the device-local Graph view (same static metadata, local
+    edge block); vertex vectors are replicated, so each device reduces
+    its local edges and the mesh combines with `lax.pmin` — the TPU
+    analogue of the PRAM's concurrent-min memory.  ``relax2`` stacks the
+    two independent reductions into a single pmin all-reduce (§Perf 3.1).
+    """
+    local = segment_prims(lg)
+
+    def relax(x, src_mask):
+        return jax.lax.pmin(local.relax(x, src_mask), axes)
+
+    def in_weight_nf(nf_mask):
+        return jax.lax.pmin(local.in_weight_nf(nf_mask), axes)
+
+    def relax2(x, src_mask, nf_mask):
+        both = jax.lax.pmin(
+            jnp.stack([local.relax(x, src_mask),
+                       local.in_weight_nf(nf_mask)]), axes)
+        return both[0], both[1]
+
+    # vertex arrays are replicated: the global masked min needs no
+    # collective of its own.
+    return Primitives(relax=relax, in_weight_nf=in_weight_nf,
+                      masked_min=_masked_min_local, relax2=relax2)

@@ -12,6 +12,12 @@ Mapping of the paper's PRAM model onto the TPU mesh (DESIGN.md §2/§5):
     no host round-trips and XLA can schedule the pmin of round r against
     the gathers of round r (compute/comm overlap).
 
+The round body itself is ``engine._round`` — this module only supplies
+the edge-sharded backend primitives (backends.distributed_prims) and the
+shard_map plumbing.  Batched multi-source solves put the `jax.vmap` over
+sources *inside* the shard_map body: vertex state is replicated, so the
+per-round pmin simply reduces [B, n] blocks instead of [n].
+
 For graphs whose vertex vectors outgrow a chip (≥1e8 vertices) the
 vertex axis would additionally be sharded over `model`; that variant is
 exercised by the dry-run configs in configs/sssp_*.py.
@@ -19,7 +25,6 @@ exercised by the dry-run configs in configs/sssp_*.py.
 from __future__ import annotations
 
 import dataclasses
-from functools import partial
 
 import jax
 import jax.numpy as jnp
@@ -28,8 +33,8 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 from jax.experimental.shard_map import shard_map
 
 from repro.core.graph import Graph, INF, round_up
-from repro.core.sssp.engine import (
-    SSSPConfig, SSSPState, SP4_CONFIG, _init_state, _round, _cond)
+from repro.core.sssp.backends import distributed_prims
+from repro.core.sssp.engine import SSSPConfig, SP4_CONFIG, _solve
 
 
 def shard_graph_edges(g: Graph, n_shards: int) -> Graph:
@@ -46,78 +51,62 @@ def shard_graph_edges(g: Graph, n_shards: int) -> Graph:
     )
 
 
+def default_mesh() -> tuple[Mesh, tuple[str, ...]]:
+    return Mesh(np.asarray(jax.devices()).reshape(-1), ("data",)), ("data",)
+
+
+def make_sharded_solver(g: Graph, cfg: SSSPConfig = SP4_CONFIG,
+                        mesh: Mesh | None = None,
+                        axes: tuple[str, ...] = ("data",),
+                        on_trace=None):
+    """Build (sharded_graph, jitted batched solve) for the Solver facade.
+
+    The returned callable maps ``sources: int32[B] -> SSSPState`` with
+    batched (leading-B) state arrays; sources are replicated over the
+    mesh and vmapped inside the shard_map body.  ``on_trace`` (if given)
+    is called once per XLA trace — the Solver's retrace counter.
+    """
+    if mesh is None:
+        mesh, axes = default_mesh()
+    n_shards = int(np.prod([mesh.shape[a] for a in axes]))
+    g = shard_graph_edges(g, n_shards)
+    edge_spec = P(axes)          # shard edge arrays along the flat data axes
+    vert_spec = P()              # vertex arrays (and sources) replicated
+
+    def body(src, dst, w, sources):
+        if on_trace is not None:
+            on_trace()
+        # a device-local Graph view: same static metadata, local edge block
+        lg = dataclasses.replace(
+            g, e_pad=g.e_pad // n_shards, src=src, dst=dst, w=w)
+        prims = distributed_prims(lg, axes)
+        return jax.vmap(lambda s: _solve(lg, cfg, s, prims=prims))(sources)
+
+    fn = shard_map(
+        body, mesh=mesh,
+        in_specs=(edge_spec, edge_spec, edge_spec, vert_spec),
+        out_specs=vert_spec, check_rep=False)
+    jitted = jax.jit(fn)
+
+    def solve_batch(sources: jax.Array):
+        return jitted(g.src, g.dst, g.w, jnp.asarray(sources, jnp.int32))
+
+    return g, solve_batch
+
+
 def run_sssp_distributed(g: Graph, source: int = 0,
                          cfg: SSSPConfig = SP4_CONFIG,
                          mesh: Mesh | None = None,
                          axes: tuple[str, ...] = ("data",)):
     """Run the engine with edges sharded over `axes` of `mesh`.
 
+    Compatibility shim (prefer ``repro.sssp.Solver(backend="distributed")``).
     Returns (D, C, fixed, rounds) — bitwise identical to the single-device
     engine (min is associative and the edge partition is disjoint).
     """
-    if mesh is None:
-        mesh = Mesh(np.asarray(jax.devices()).reshape(-1), ("data",))
-        axes = ("data",)
-    n_shards = int(np.prod([mesh.shape[a] for a in axes]))
-    g = shard_graph_edges(g, n_shards)
-    max_rounds = cfg.max_rounds or g.n + 2
-
-    edge_spec = P(axes)          # shard edge arrays along the flat data axes
-    vert_spec = P()              # vertex arrays replicated
-
-    # a device-local Graph view: same static metadata, local edge block
-    def local_graph(src, dst, w):
-        return dataclasses.replace(
-            g, e_pad=g.e_pad // n_shards, src=src, dst=dst, w=w)
-
-    def seg_min_dist(lg):
-        def f(edge_vals):
-            loc = jax.ops.segment_min(
-                edge_vals, lg.dst, num_segments=lg.num_segments,
-                indices_are_sorted=True)[: lg.n]
-            return jax.lax.pmin(loc, axes)
-        return f
-
-    def seg_max_dist(lg):
-        def f(edge_vals):
-            loc = jax.ops.segment_max(
-                edge_vals, lg.dst, num_segments=lg.num_segments,
-                indices_are_sorted=True)[: lg.n]
-            return jax.lax.pmax(loc, axes)
-        return f
-
-    def seg_min2_dist(lg):
-        """Two independent reductions -> ONE stacked pmin all-reduce
-        (halves per-round collective launches; §Perf iteration 3.1)."""
-        def f(ev_a, ev_b):
-            la = jax.ops.segment_min(
-                ev_a, lg.dst, num_segments=lg.num_segments,
-                indices_are_sorted=True)[: lg.n]
-            lb = jax.ops.segment_min(
-                ev_b, lg.dst, num_segments=lg.num_segments,
-                indices_are_sorted=True)[: lg.n]
-            both = jax.lax.pmin(jnp.stack([la, lb]), axes)
-            return both[0], both[1]
-        return f
-
-    def body(src, dst, w):
-        lg = local_graph(src, dst, w)
-        smin, smax = seg_min_dist(lg), seg_max_dist(lg)
-        smin2 = seg_min2_dist(lg)
-        state = _init_state(lg, source)
-        state = jax.lax.while_loop(
-            lambda s: _cond(s, max_rounds),
-            lambda s: _round(lg, cfg, s, seg_min=smin, seg_max=smax,
-                             seg_min2=smin2),
-            state)
-        return state.D, state.C, state.fixed, state.round
-
-    fn = shard_map(
-        body, mesh=mesh,
-        in_specs=(edge_spec, edge_spec, edge_spec),
-        out_specs=(vert_spec, vert_spec, vert_spec, vert_spec),
-        check_rep=False)
-    return jax.jit(fn)(g.src, g.dst, g.w)
+    _, solve_batch = make_sharded_solver(g, cfg, mesh, axes)
+    state = solve_batch(jnp.asarray([source], jnp.int32))
+    return state.D[0], state.C[0], state.fixed[0], state.round[0]
 
 
 def lower_distributed(g: Graph, mesh: Mesh, source: int = 0,
@@ -126,30 +115,12 @@ def lower_distributed(g: Graph, mesh: Mesh, source: int = 0,
     """Lower (no execute) for the dry-run: returns jax.stages.Lowered."""
     n_shards = int(np.prod([mesh.shape[a] for a in axes]))
     g = shard_graph_edges(g, n_shards)
-    max_rounds = cfg.max_rounds or g.n + 2
     edge_spec, vert_spec = P(axes), P()
 
     def body(src, dst, w):
         lg = dataclasses.replace(
             g, e_pad=g.e_pad // n_shards, src=src, dst=dst, w=w)
-
-        def smin(ev):
-            loc = jax.ops.segment_min(
-                ev, lg.dst, num_segments=lg.num_segments,
-                indices_are_sorted=True)[: lg.n]
-            return jax.lax.pmin(loc, axes)
-
-        def smax(ev):
-            loc = jax.ops.segment_max(
-                ev, lg.dst, num_segments=lg.num_segments,
-                indices_are_sorted=True)[: lg.n]
-            return jax.lax.pmax(loc, axes)
-
-        state = _init_state(lg, source)
-        state = jax.lax.while_loop(
-            lambda s: _cond(s, max_rounds),
-            lambda s: _round(lg, cfg, s, seg_min=smin, seg_max=smax),
-            state)
+        state = _solve(lg, cfg, source, prims=distributed_prims(lg, axes))
         return state.D, state.C, state.fixed, state.round
 
     fn = shard_map(body, mesh=mesh,

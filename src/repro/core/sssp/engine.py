@@ -27,9 +27,14 @@ discovered edge each round, Bellman-Ford style.
 per round lets lower bounds chase the upper bounds along chains of k
 vertices, fixing whole runs per round (the paper applies it once).
 
-All reductions are `segment_min/max` over the dst-sorted edge list —
-the identical kernel regime as GNN message passing (see kernels/relax.py
-for the Pallas version used on the ELL layout).
+The same configuration move applies to execution substrates: ``_round``
+is THE round body — the only place the min/pred/in/out/lb rules appear —
+and is parameterized by a backend-primitives protocol (backends.py), so
+the segment-op path, the dense-ELL path (jnp oracle or Pallas kernels),
+and the edge-sharded ``shard_map`` path are instances of one program.
+The public surface is the :class:`~repro.core.sssp.solver.Solver` facade
+(``repro.sssp``); the ``run_sssp*`` functions below remain as thin
+compatibility shims.
 """
 from __future__ import annotations
 
@@ -41,6 +46,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.graph import Graph, INF
+from repro.core.sssp import backends
 
 Rules = frozenset
 
@@ -86,18 +92,53 @@ class SSSPState:
 
 @dataclasses.dataclass
 class SSSPResult:
+    """Distances + certificates for one source, with lazy tree extraction.
+
+    ``parents()``/``path_to()`` fold the old standalone ``parents.py``
+    workflow into the result: parent pointers are computed (and cached)
+    only when first asked for, from the same graph the solve ran on.
+    """
+
     dist: jax.Array
     C: jax.Array
     fixed: jax.Array
     rounds: int
     fixed_by: dict[str, int]
     trace: list | None = None
+    source: int | None = None
+    graph: Graph | None = None
+    _parents: np.ndarray | None = dataclasses.field(
+        default=None, repr=False, compare=False)
+
+    def parents(self) -> np.ndarray:
+        """int32[n] shortest-path-tree parent per vertex (lazy, cached)."""
+        if self._parents is None:
+            if self.graph is None:
+                raise ValueError("result carries no graph; "
+                                 "solve via Solver/run_sssp to attach one")
+            from repro.core.sssp.parents import parent_pointers
+            self._parents = np.asarray(parent_pointers(self.graph, self.dist))
+        return self._parents
+
+    def path_to(self, target: int) -> list[int] | None:
+        """Vertex list source..target along a shortest path, or None."""
+        if self.source is None:
+            raise ValueError("result carries no source vertex")
+        from repro.core.sssp.parents import extract_path
+        return extract_path(self.parents(), int(target), int(self.source))
 
 
 _RULE_ORDER = ("min", "pred", "in", "out", "lb")
 
 
-def _init_state(g: Graph, source: int) -> SSSPState:
+def _fixed_by_dict(fixed_by) -> dict[str, int]:
+    fb = np.asarray(fixed_by)
+    return {r: int(c) for r, c in zip(_RULE_ORDER, fb)}
+
+
+def _init_state(g: Graph, source) -> SSSPState:
+    """``source`` may be a python int or a traced int32 scalar — keeping it
+    traced is what lets the Solver vmap over sources without retracing."""
     D = jnp.full((g.n,), INF, jnp.float32).at[source].set(0.0)
     C = jnp.zeros((g.n,), jnp.float32)
     fixed = jnp.zeros((g.n,), bool)
@@ -106,25 +147,25 @@ def _init_state(g: Graph, source: int) -> SSSPState:
 
 
 def _round(g: Graph, cfg: SSSPConfig, state: SSSPState,
-           seg_min=None, seg_max=None, seg_min2=None) -> SSSPState:
-    """One bulk-synchronous round.
+           prims: backends.Primitives | None = None) -> SSSPState:
+    """One bulk-synchronous round — THE round body.
 
-    ``seg_min``/``seg_max`` default to the graph's local segment
-    reductions; the distributed engine (distributed.py) passes
-    edge-sharded versions that finish with a `lax.pmin`/`pmax` over the
-    mesh axis — the TPU analogue of the PRAM's concurrent-min memory.
+    ``prims`` is the backend-primitives protocol (backends.py): segment
+    ops by default; the ELL/Pallas and edge-sharded distributed backends
+    pass their own.  Every fixing rule below is written once, against
+    ``prims`` only.
 
-    ``seg_min2`` (optional) fuses TWO independent reductions into one
-    call — the distributed version stacks them into a single pmin
-    all-reduce.  Exactness: both reductions depend only on round-start
-    state (the relax candidates use old D/fixed; inWeight_nf uses old
-    fixed), so fusing changes no semantics (§Perf iteration 3.1).
+    ``prims.relax2`` (optional) fuses the TWO independent reductions of
+    step 1 into one call — the distributed backend stacks them into a
+    single pmin all-reduce.  Exactness: both reductions depend only on
+    round-start state (the relax candidates use old D/fixed; inWeight_nf
+    uses old fixed), so fusing changes no semantics (§Perf 3.1).
 
     Note the pred rule needs no reduction of its own when the in rule is
     active: "no non-fixed in-edge" ⟺ inWeight_nf == +inf (§Perf 3.2).
     """
-    seg_min = seg_min if seg_min is not None else g.seg_min_at_dst
-    seg_max = seg_max if seg_max is not None else g.seg_max_at_dst
+    if prims is None:
+        prims = backends.segment_prims(g)
     D, C, fixed = state.D, state.C, state.fixed
 
     # --- Step 1: D relaxation (the R-exploration of SP1–SP3 / Step 3 of
@@ -135,19 +176,15 @@ def _round(g: Graph, cfg: SSSPConfig, state: SSSPState,
         relax_src = D < INF      # Bellman-Ford style: every discovered edge
     else:
         relax_src = fixed        # label-setting: out-edges of fixed vertices
-    src_ok = g.gather_src(relax_src, fill=False)
-    Dsrc = g.gather_src(D)
-    cand = jnp.where(src_ok, Dsrc + g.w, INF)
-    nf_src = g.gather_src(~fixed, fill=False)  # bool per edge
 
     need_inw = ("in" in cfg.rules) or ("pred" in cfg.rules)
     in_w_nf = None
-    if need_inw and seg_min2 is not None:
-        D_relax, in_w_nf = seg_min2(cand, jnp.where(nf_src, g.w, INF))
+    if need_inw and prims.relax2 is not None:
+        D_relax, in_w_nf = prims.relax2(D, relax_src, ~fixed)
     else:
-        D_relax = seg_min(cand)
+        D_relax = prims.relax(D, relax_src)
         if need_inw:
-            in_w_nf = seg_min(jnp.where(nf_src, g.w, INF))
+            in_w_nf = prims.in_weight_nf(~fixed)
     D = jnp.where(~fixed, jnp.minimum(D, D_relax), D)
     explored = fixed  # all currently-fixed vertices are now relaxed-at-final-D
 
@@ -155,7 +192,7 @@ def _round(g: Graph, cfg: SSSPConfig, state: SSSPState,
     active = discovered & ~fixed
 
     # --- Step 2: global reductions (the heap minima of SP1–SP3) ---
-    minD = jnp.min(jnp.where(active, D, INF))
+    minD = prims.masked_min(D, active)
     new_fix = jnp.zeros_like(fixed)
     rule_counts = []
 
@@ -188,7 +225,7 @@ def _round(g: Graph, cfg: SSSPConfig, state: SSSPState,
 
     # R_out (Lemma 8 / Crauser out-version)
     if "out" in cfg.rules:
-        threshold = jnp.min(jnp.where(active, D + g.out_weight, INF))
+        threshold = prims.masked_min(D + g.out_weight, active)
         new_fix = new_fix | count(active & (D <= threshold))
     else:
         rule_counts.append(jnp.int32(0))
@@ -198,9 +235,9 @@ def _round(g: Graph, cfg: SSSPConfig, state: SSSPState,
     # --- Step 3: C update (Lemma 7 lift, then Lemma 6 / Eqn (1)) ---
     if "lb" in cfg.rules:
         C = jnp.where(fixed1, D, jnp.maximum(C, minD))
+        all_src = jnp.ones_like(fixed)
         for _ in range(cfg.c_prop_iters):
-            Csrc = g.gather_src(C)
-            c_in = seg_min(Csrc + g.w)
+            c_in = prims.relax(C, all_src)
             C = jnp.where(~fixed1, jnp.maximum(C, c_in), C)
         fix_lb = ~fixed1 & discovered & (C >= D)
         rule_counts.append(jnp.sum(fix_lb, dtype=jnp.int32))
@@ -222,112 +259,63 @@ def _cond(state: SSSPState, max_rounds: int):
     return (jnp.any(active) | jnp.any(pending)) & (state.round < max_rounds)
 
 
-# jit with the graph as a traced pytree (weights/topology can change without
-# recompiling as long as n/e_pad match) but cfg/source static.
-@partial(jax.jit, static_argnames=("cfg", "source"))
-def _run_traced_graph(g: Graph, cfg: SSSPConfig, source: int) -> SSSPState:
+def _solve(g: Graph, cfg: SSSPConfig, source,
+           prims: backends.Primitives | None = None) -> SSSPState:
+    """while_loop to fixpoint; ``source`` may be traced (vmap-able)."""
     state = _init_state(g, source)
     max_rounds = cfg.max_rounds or g.n + 2
     return jax.lax.while_loop(
-        lambda s: _cond(s, max_rounds), partial(_round, g, cfg), state)
+        lambda s: _cond(s, max_rounds),
+        partial(_round, g, cfg, prims=prims), state)
+
+
+# jit with the graph as a traced pytree (weights/topology can change without
+# recompiling as long as n/e_pad match) and the SOURCE TRACED as well — k
+# distinct sources on one graph shape share a single compilation.
+@partial(jax.jit, static_argnames=("cfg",))
+def _run_traced_graph(g: Graph, cfg: SSSPConfig, source) -> SSSPState:
+    return _solve(g, cfg, source)
+
+
+@partial(jax.jit, static_argnames=("cfg",))
+def _run_traced_ell(g: Graph, ell, cfg: SSSPConfig, source) -> SSSPState:
+    return _solve(g, cfg, source,
+                  prims=backends.ell_prims(g, ell, cfg.use_pallas))
 
 
 def run_sssp(g: Graph, source: int = 0,
              cfg: SSSPConfig = SP4_CONFIG) -> SSSPResult:
-    """Run the engine under jit (lax.while_loop)."""
-    state = _run_traced_graph(g, cfg, source)
-    fb = np.asarray(state.fixed_by)
+    """Run the engine under jit (lax.while_loop).
+
+    Compatibility shim — prefer ``repro.sssp.Solver`` which amortizes
+    prep/compilation across sources and batches them.
+    """
+    state = _run_traced_graph(g, cfg, jnp.int32(source))
     return SSSPResult(
         dist=state.D, C=state.C, fixed=state.fixed,
-        rounds=int(state.round),
-        fixed_by={r: int(c) for r, c in zip(_RULE_ORDER, fb)})
+        rounds=int(state.round), fixed_by=_fixed_by_dict(state.fixed_by),
+        source=int(source), graph=g)
 
 
 def run_sssp_ell(g: Graph, ell, source: int = 0,
                  cfg: SSSPConfig = SP4_CONFIG) -> SSSPResult:
-    """Engine rounds computed on the dense ELL layout via kernels/ops.
+    """Engine rounds on the dense ELL layout via kernels/ops.
 
-    Every per-round reduction is one call of the fused relax kernel
+    Compatibility shim over the ELL backend primitives — the SAME
+    ``_round``/``lax.while_loop`` program as ``run_sssp``, with every
+    per-round reduction one call of the fused relax kernel
     (min over in-edges of x[src]+w, masked):
       D_relax  = relax(D, mask=relax_src)
       inW_nf   = relax(0, mask=~fixed)        (x=0 -> plain min weight)
       c_in     = relax(C, mask=all)
       pred     = via masked weight min == inf (no non-fixed in-edge)
-    Used by the Pallas integration tests and the TPU deployment path
-    (cfg.use_pallas=True); falls back to the jnp oracle otherwise.
+    ``cfg.use_pallas=True`` selects the Pallas kernels (TPU deployment
+    path); the jnp oracle otherwise.
     """
-    from repro.kernels import ops
-
-    up = cfg.use_pallas
-    n = g.n
-    zeros = jnp.zeros((n,), jnp.float32)
-    ones_mask = jnp.ones((n,), bool)
-
-    def seg_min_like(D_vals, mask):
-        return ops.relax_ell(D_vals, ell, mask, use_pallas=up)
-
-    state = _init_state(g, source)
-    max_rounds = cfg.max_rounds or g.n + 2
-
-    def round_fn(state: SSSPState) -> SSSPState:
-        D, C, fixed = state.D, state.C, state.fixed
-        relax_src = (D < INF) if cfg.label_correcting else fixed
-        D_relax = seg_min_like(D, relax_src)
-        D = jnp.where(~fixed, jnp.minimum(D, D_relax), D)
-        explored = fixed
-        discovered = D < INF
-        active = discovered & ~fixed
-        minD = ops.masked_min(D, active, use_pallas=up)
-        new_fix = jnp.zeros_like(fixed)
-        counts = []
-
-        def count(mask):
-            counts.append(jnp.sum(mask & active & ~new_fix, dtype=jnp.int32))
-            return mask
-
-        if "min" in cfg.rules:
-            new_fix = new_fix | count(active & (D <= minD))
-        else:
-            counts.append(jnp.int32(0))
-        in_w_nf = seg_min_like(zeros, ~fixed)
-        if "pred" in cfg.rules:
-            new_fix = new_fix | count(active & jnp.isinf(in_w_nf))
-        else:
-            counts.append(jnp.int32(0))
-        if "in" in cfg.rules:
-            new_fix = new_fix | count(active & (D <= minD + in_w_nf))
-        else:
-            counts.append(jnp.int32(0))
-        if "out" in cfg.rules:
-            threshold = ops.masked_min(D + g.out_weight, active,
-                                       use_pallas=up)
-            new_fix = new_fix | count(active & (D <= threshold))
-        else:
-            counts.append(jnp.int32(0))
-        fixed1 = fixed | new_fix
-        if "lb" in cfg.rules:
-            C = jnp.where(fixed1, D, jnp.maximum(C, minD))
-            for _ in range(cfg.c_prop_iters):
-                c_in = seg_min_like(C, ones_mask)
-                C = jnp.where(~fixed1, jnp.maximum(C, c_in), C)
-            fix_lb = ~fixed1 & discovered & (C >= D)
-            counts.append(jnp.sum(fix_lb, dtype=jnp.int32))
-            fixed2 = fixed1 | fix_lb
-            C = jnp.where(fixed2, D, C)
-        else:
-            counts.append(jnp.int32(0))
-            fixed2 = fixed1
-            C = jnp.where(fixed2, D, C)
-        return SSSPState(D=D, C=C, fixed=fixed2, explored=explored,
-                         round=state.round + 1,
-                         fixed_by=state.fixed_by + jnp.stack(counts))
-
-    while bool(np.asarray(_cond(state, max_rounds))):
-        state = round_fn(state)
+    state = _run_traced_ell(g, ell, cfg, jnp.int32(source))
     return SSSPResult(
         dist=state.D, C=state.C, fixed=state.fixed, rounds=int(state.round),
-        fixed_by={r: int(c) for r, c in
-                  zip(_RULE_ORDER, np.asarray(state.fixed_by))})
+        fixed_by=_fixed_by_dict(state.fixed_by), source=int(source), graph=g)
 
 
 def run_sssp_traced(g: Graph, source: int = 0,
@@ -364,6 +352,5 @@ def run_sssp_traced(g: Graph, source: int = 0,
         prev_fb = fb
     return SSSPResult(
         dist=state.D, C=state.C, fixed=state.fixed, rounds=int(state.round),
-        fixed_by={r: int(c) for r, c in
-                  zip(_RULE_ORDER, np.asarray(state.fixed_by))},
-        trace=trace)
+        fixed_by=_fixed_by_dict(state.fixed_by), trace=trace,
+        source=int(source), graph=g)

@@ -1,0 +1,203 @@
+"""The unified SSSP solver: one object, any backend, batched sources.
+
+``Solver`` amortizes everything that is per-graph — device transfer,
+layout build (ELL), shard re-padding, and XLA compilation — so that
+answering a new source is a pure execution, never a retrace:
+
+  * the source is a TRACED int32 argument of the compiled program, so k
+    distinct sources on one graph shape share a single compilation;
+  * ``solve_batch`` is a ``jax.vmap`` over that traced source — one
+    program solves B sources at once (the bulk-synchronous rounds of the
+    slowest source dominate; everything else rides along masked);
+  * backends are instances of the primitives protocol (backends.py), so
+    ``"segment"``, ``"ell"``, ``"pallas"`` and ``"distributed"`` all run
+    the SAME round body (engine._round).
+
+This is the Kainer–Träff observation operationalized: the paper's
+criteria machinery pays off most when its fixed costs are amortized
+across many queries.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.graph import EllGraph, Graph, HostGraph, build_ell
+from repro.core.sssp import backends
+from repro.core.sssp.engine import (SP4_CONFIG, SSSPConfig, SSSPResult,
+                                    _fixed_by_dict, _solve)
+
+BACKENDS = ("auto", "segment", "ell", "pallas", "distributed")
+
+
+@dataclasses.dataclass
+class SSSPBatchResult:
+    """Distances for B sources on one graph; indexable into SSSPResults.
+
+    ``dist``/``C``/``fixed`` have a leading batch dim; ``rounds`` is the
+    per-source round count.  ``result(i)`` (or ``batch[i]``) views one
+    source as a plain :class:`SSSPResult` with lazy parents/paths.
+    """
+
+    sources: np.ndarray      # int32[B]
+    dist: jax.Array          # float32[B, n]
+    C: jax.Array             # float32[B, n]
+    fixed: jax.Array         # bool[B, n]
+    rounds: np.ndarray       # int32[B]
+    fixed_by: list[dict[str, int]]
+    graph: Graph | None = None
+
+    def __len__(self) -> int:
+        return len(self.sources)
+
+    def result(self, i: int) -> SSSPResult:
+        return SSSPResult(
+            dist=self.dist[i], C=self.C[i], fixed=self.fixed[i],
+            rounds=int(self.rounds[i]), fixed_by=self.fixed_by[i],
+            source=int(self.sources[i]), graph=self.graph)
+
+    __getitem__ = result
+
+
+def _next_pow2(x: int) -> int:
+    return 1 << max(0, (x - 1).bit_length())
+
+
+class Solver:
+    """Compiled multi-source SSSP over one graph.
+
+    Parameters
+    ----------
+    graph:    a device ``Graph``, a ``HostGraph``, or an ``(n, src, dst,
+              w)`` tuple of host arrays.
+    cfg:      engine configuration (rules / label-correcting / c-prop).
+    backend:  "auto" | "segment" | "ell" | "pallas" | "distributed".
+              "auto" picks "pallas" when ``cfg.use_pallas`` else
+              "segment" (robust for every graph family, including
+              power-law in-degree skew that the dense ELL layout hates).
+    ell:      pre-built :class:`EllGraph` for the ell/pallas backends
+              (built from the graph's edges when omitted).
+    mesh/axes: mesh placement for the "distributed" backend.
+
+    ``trace_count`` counts XLA traces actually performed — the regression
+    tests assert it stays at one per (program, batch-shape), however many
+    sources are solved.
+    """
+
+    def __init__(self, graph, cfg: SSSPConfig = SP4_CONFIG,
+                 backend: str = "auto", *, ell: EllGraph | None = None,
+                 mesh=None, axes: tuple[str, ...] = ("data",),
+                 max_deg_cap: int | None = None):
+        if backend not in BACKENDS:
+            raise ValueError(f"unknown backend {backend!r}; "
+                             f"expected one of {BACKENDS}")
+        if isinstance(graph, HostGraph):
+            graph = graph.to_device()
+        elif isinstance(graph, tuple):
+            from repro.core.graph import build_graph
+            graph = build_graph(*graph)
+        if not isinstance(graph, Graph):
+            raise TypeError(f"graph must be Graph/HostGraph/tuple, "
+                            f"got {type(graph)!r}")
+        if backend == "auto":
+            backend = "pallas" if cfg.use_pallas else "segment"
+        if backend == "pallas":
+            cfg = dataclasses.replace(cfg, use_pallas=True)
+        self.graph = graph
+        self.cfg = cfg
+        self.backend = backend
+        self.trace_count = 0
+        self.ell: EllGraph | None = None
+
+        if backend in ("ell", "pallas"):
+            if ell is None:
+                e = graph.e
+                ell = build_ell(graph.n, np.asarray(graph.src[:e]),
+                                np.asarray(graph.dst[:e]),
+                                np.asarray(graph.w[:e]),
+                                max_deg_cap=max_deg_cap)
+            self.ell = ell
+
+        def _count_trace():
+            self.trace_count += 1  # python side effect: runs per TRACE
+
+        if backend == "distributed":
+            from repro.core.sssp.distributed import make_sharded_solver
+            self.graph, self._sharded_batch = make_sharded_solver(
+                graph, cfg, mesh, axes, on_trace=_count_trace)
+            self._jit_one = None
+            self._jit_batch = None
+        else:
+            # ``ell`` rides through jit as a traced pytree operand (None
+            # for the segment backend): baked-in constants would bloat
+            # every compiled batch shape with the [n_pad, deg_pad] arrays.
+            def _prims(g, ell):
+                if ell is not None:
+                    return backends.ell_prims(g, ell, cfg.use_pallas)
+                return backends.segment_prims(g)
+
+            def solve_one(g, ell, source):
+                _count_trace()
+                return _solve(g, cfg, source, prims=_prims(g, ell))
+
+            def solve_many(g, ell, sources):
+                _count_trace()
+                return jax.vmap(
+                    lambda s: _solve(g, cfg, s,
+                                     prims=_prims(g, ell)))(sources)
+
+            self._jit_one = jax.jit(solve_one)
+            self._jit_batch = jax.jit(solve_many)
+            self._sharded_batch = None
+
+    # ------------------------------------------------------------------
+    def _check_sources(self, sources: np.ndarray) -> None:
+        # out-of-range indices would be silently DROPPED by jax .at[].set
+        # under jit (all-INF distances), so reject them loudly here.
+        bad = sources[(sources < 0) | (sources >= self.graph.n)]
+        if bad.size:
+            raise ValueError(
+                f"source vertices {bad.tolist()} out of range "
+                f"[0, {self.graph.n})")
+
+    def solve(self, source: int) -> SSSPResult:
+        """Distances from one source (compiled once per graph shape)."""
+        self._check_sources(np.asarray([source], np.int64))
+        if self._jit_one is None:  # distributed: batch of one
+            return self.solve_batch([source])[0]
+        state = self._jit_one(self.graph, self.ell, jnp.int32(source))
+        return SSSPResult(
+            dist=state.D, C=state.C, fixed=state.fixed,
+            rounds=int(state.round), fixed_by=_fixed_by_dict(state.fixed_by),
+            source=int(source), graph=self.graph)
+
+    def solve_batch(self, sources) -> SSSPBatchResult:
+        """Distances from B sources via one vmapped program.
+
+        The batch is right-padded (repeating the last source) to the next
+        power of two so arbitrary request counts reuse a handful of
+        compiled batch shapes; padding lanes are sliced off the result.
+        """
+        sources = np.asarray(sources, np.int32).ravel()
+        if sources.size == 0:
+            raise ValueError("solve_batch needs at least one source")
+        self._check_sources(sources)
+        b = len(sources)
+        b_pad = _next_pow2(b)
+        padded = np.concatenate(
+            [sources, np.full(b_pad - b, sources[-1], np.int32)])
+        if self._sharded_batch is not None:
+            state = self._sharded_batch(padded)
+        else:
+            state = self._jit_batch(self.graph, self.ell,
+                                    jnp.asarray(padded))
+        fb = np.asarray(state.fixed_by)
+        return SSSPBatchResult(
+            sources=sources,
+            dist=state.D[:b], C=state.C[:b], fixed=state.fixed[:b],
+            rounds=np.asarray(state.round[:b]),
+            fixed_by=[_fixed_by_dict(fb[i]) for i in range(b)],
+            graph=self.graph)

@@ -1,0 +1,30 @@
+"""``repro.sssp`` — the one public SSSP surface.
+
+    from repro import sssp
+
+    solver = sssp.Solver(graph)            # prep + compile once
+    res = solver.solve(0)                  # one source
+    batch = solver.solve_batch([0, 7, 42]) # many sources, one program
+    batch[1].path_to(99)                   # lazy parents/paths
+
+Backends (``backend=``): "segment" (default; dst-sorted edge list),
+"ell"/"pallas" (dense in-neighbour layout, jnp oracle or Pallas TPU
+kernels), "distributed" (edge-sharded shard_map over the mesh).  All run
+the same round body (engine._round) through the backend-primitives
+protocol (backends.Primitives).
+
+The legacy entry points ``run_sssp`` / ``run_sssp_ell`` /
+``run_sssp_distributed`` remain importable here as deprecation shims.
+"""
+from repro.core.graph import (  # noqa: F401
+    EllGraph, Graph, HostGraph, build_ell, build_graph)
+from repro.core.sssp.backends import Primitives  # noqa: F401
+from repro.core.sssp.engine import (  # noqa: F401
+    SP1_RULES, SP2_RULES, SP3_RULES, SP3_CONFIG, SP4_CONFIG, SSSPConfig,
+    SSSPResult, run_sssp, run_sssp_ell, run_sssp_traced)
+from repro.core.sssp.distributed import run_sssp_distributed  # noqa: F401
+from repro.core.sssp.parents import (  # noqa: F401
+    extract_path, parent_pointers)
+from repro.core.sssp.reference import dijkstra, sp1, sp2, sp3  # noqa: F401
+from repro.core.sssp.solver import (  # noqa: F401
+    BACKENDS, Solver, SSSPBatchResult)

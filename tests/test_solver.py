@@ -1,0 +1,132 @@
+"""The unified Solver facade: batched sources, backends, no-retrace,
+lazy paths, and the serving runtime."""
+import numpy as np
+import pytest
+
+from conftest import assert_dist_equal
+from repro.core import generators as gen
+from repro.core.graph import HostGraph
+from repro.core.sssp.reference import dijkstra
+from repro.sssp import SP3_CONFIG, SP4_CONFIG, Solver
+from repro.runtime.sssp_service import Query, SSSPService
+
+FAMILIES = ["gnp", "dag", "unweighted", "grid", "power_law", "chain",
+            "geometric"]
+
+
+def _graph(family, n=200, seed=11):
+    nn, src, dst, w = gen.make(family, n, seed=seed)
+    return HostGraph(nn, src, dst, w)
+
+
+@pytest.mark.parametrize("family", FAMILIES)
+def test_solve_batch_matches_dijkstra_every_family(family):
+    hg = _graph(family)
+    solver = Solver(hg.to_device())
+    sources = [s % hg.n for s in (0, 1, 5, 17, 42, 63, 99, 151)]
+    batch = solver.solve_batch(sources)
+    assert len(batch) == len(sources)
+    for i, s in enumerate(sources):
+        assert_dist_equal(batch.dist[i], dijkstra(hg, source=s).dist)
+        # indexing into a per-source result keeps source/dist aligned
+        assert batch[i].source == s
+
+
+@pytest.mark.parametrize("backend", ["segment", "ell", "pallas",
+                                     "distributed"])
+def test_backends_agree(backend):
+    hg = _graph("gnp", n=150, seed=4)
+    expected = dijkstra(hg, source=9).dist
+    solver = Solver(hg.to_device(), SP4_CONFIG, backend=backend)
+    assert_dist_equal(solver.solve(9).dist, expected)
+    batch = solver.solve_batch([0, 9, 31])
+    assert_dist_equal(batch.dist[1], expected)
+
+
+def test_no_retrace_across_sources():
+    """k distinct sources on one graph shape => exactly one compilation."""
+    hg = _graph("gnp", n=120, seed=2)
+    solver = Solver(hg.to_device())
+    for s in range(9):
+        solver.solve(s)
+    assert solver.trace_count == 1, "solve() must not retrace per source"
+
+    before = solver.trace_count
+    solver.solve_batch([3, 1, 4, 1, 5, 9, 2, 6])
+    solver.solve_batch([2, 7, 1, 8, 2, 8, 1, 8])  # same batch shape
+    assert solver.trace_count == before + 1, \
+        "solve_batch must compile once per batch shape"
+
+
+def test_batch_padding_reuses_shapes():
+    """Request counts pad to powers of two: 3 and 4 share a program."""
+    hg = _graph("gnp", n=100, seed=5)
+    solver = Solver(hg.to_device())
+    solver.solve_batch([0, 1, 2])      # pads to 4
+    before = solver.trace_count
+    solver.solve_batch([3, 4, 5, 6])   # exactly 4
+    assert solver.trace_count == before
+
+
+def test_solver_accepts_host_graph_and_tuple():
+    hg = _graph("chain", n=80, seed=1)
+    expected = dijkstra(hg).dist
+    assert_dist_equal(Solver(hg).solve(0).dist, expected)
+    assert_dist_equal(
+        Solver((hg.n, hg.src, hg.dst, hg.w)).solve(0).dist, expected)
+
+
+def test_result_lazy_paths():
+    hg = _graph("gnp", n=150, seed=7)
+    solver = Solver(hg.to_device(), SP3_CONFIG)
+    res = solver.solve(0)
+    dist = np.asarray(res.dist, np.float64)
+    for v in range(1, hg.n, 17):
+        if np.isinf(dist[v]):
+            assert res.path_to(v) is None
+            continue
+        path = res.path_to(v)
+        assert path[0] == 0 and path[-1] == v
+        wmap = {(int(s), int(d)): float(ww)
+                for s, d, ww in zip(hg.src, hg.dst, hg.w)}
+        cost = sum(wmap[(a, b)] for a, b in zip(path, path[1:]))
+        np.testing.assert_allclose(cost, dist[v], rtol=1e-5, atol=1e-4)
+
+
+def test_service_answers_and_caches():
+    hg = _graph("gnp", n=200, seed=9)
+    service = SSSPService(hg.to_device(), batch=4)
+    rng = np.random.default_rng(0)
+    sources = [3, 3, 17, 42, 3, 17]
+    queries = [Query(source=s, target=int(rng.integers(0, hg.n)))
+               for s in sources]
+    service.serve(queries)
+    assert all(q.done for q in queries)
+    for q in queries:
+        exp = dijkstra(hg, source=q.source).dist[q.target]
+        got = q.distance if q.distance is not None else np.inf
+        exp = exp if np.isfinite(exp) else np.inf
+        np.testing.assert_allclose(
+            np.nan_to_num(got, posinf=1e18),
+            np.nan_to_num(exp, posinf=1e18), rtol=1e-5, atol=1e-4)
+        if q.path is not None:
+            assert q.path[0] == q.source and q.path[-1] == q.target
+    assert service.stats["sources_solved"] == 3  # coalesced unique sources
+    # a second wave on the same sources is pure cache
+    wave2 = [Query(source=3, target=5), Query(source=42, target=7)]
+    service.serve(wave2)
+    assert service.stats["sources_solved"] == 3
+    assert service.stats["cache_hits"] >= 2
+
+
+def test_deprecation_shims_route_through_solver_round():
+    """run_sssp / run_sssp_ell / run_sssp_distributed still answer."""
+    from repro.sssp import run_sssp, run_sssp_ell, run_sssp_distributed
+    hg = _graph("grid", n=100, seed=3)
+    expected = dijkstra(hg).dist
+    g = hg.to_device()
+    assert_dist_equal(run_sssp(g).dist, expected)
+    assert_dist_equal(run_sssp_ell(g, hg.to_ell()).dist, expected)
+    D, C, fixed, rounds = run_sssp_distributed(g)
+    assert_dist_equal(D, expected)
+    assert int(rounds) > 0

@@ -1,7 +1,11 @@
 """Hypothesis property tests: the engine's invariants on arbitrary
 strictly-positive-weight digraphs."""
 import numpy as np
-from hypothesis import given, settings, strategies as st
+import pytest
+
+hypothesis = pytest.importorskip(
+    "hypothesis", reason="hypothesis not installed (see requirements-dev.txt)")
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from conftest import assert_dist_equal
 from repro.core.graph import HostGraph, build_graph
