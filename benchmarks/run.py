@@ -6,6 +6,7 @@
   bench_optimality  — Thm 2 (DAG O(e)) and Thm 3 (unweighted BFS)
   bench_throughput  — engine vs Bellman-Ford vs delta-stepping (CPU)
   bench_batch       — batched multi-source Solver + serving queries/sec
+  bench_dynamic     — warm incremental re-solve vs cold after weight deltas
   bench_kernels     — kernel microbench (jnp path)
 
 ``python -m benchmarks.run [--quick]`` prints CSV blocks per bench.
@@ -38,8 +39,8 @@ def main() -> None:
     ap.add_argument("--only", default=None)
     args = ap.parse_args()
 
-    from benchmarks import (bench_batch, bench_heap_ops, bench_kernels,
-                            bench_optimality, bench_rounds,
+    from benchmarks import (bench_batch, bench_dynamic, bench_heap_ops,
+                            bench_kernels, bench_optimality, bench_rounds,
                             bench_throughput)
 
     n = 600 if args.quick else 2000
@@ -53,6 +54,10 @@ def main() -> None:
         "batch": lambda: bench_batch.run(
             n=400 if args.quick else 2000, batch=8 if args.quick else 16,
             reps=1 if args.quick else 3),
+        "dynamic": lambda: bench_dynamic.run(
+            n=400 if args.quick else 2000,
+            fractions=(0.01, 0.10) if args.quick else (0.005, 0.02, 0.10),
+            deltas_per_point=1 if args.quick else 3),
         "kernels": bench_kernels.run,
     }
     t_all = time.time()

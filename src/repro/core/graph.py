@@ -96,6 +96,58 @@ class Graph:
             [vertex_vals, jnp.full((1,), fill, vertex_vals.dtype)])
         return ext[self.dst]
 
+    def apply_delta(self, delta) -> "Graph":
+        """New Graph with a batch of edge-weight updates applied.
+
+        ``delta`` is a :class:`repro.core.sssp.dynamic.GraphDelta`
+        (duck-typed): ``edge_idx`` int32[k_pad] indexes THIS graph's
+        dst-sorted edge arrays (padding rows use ``edge_idx >= e_pad``
+        and are scatter-dropped), ``new_w`` float32[k_pad] the new
+        weights.  Topology (src/dst/degrees) is unchanged; the derived
+        ``in_weight``/``out_weight`` minima are recomputed so every
+        engine rule keeps seeing coherent per-vertex bounds.  jit-safe:
+        static shapes, no retrace when only the delta values change.
+
+        Weights must stay strictly positive (the builder's invariant);
+        concrete (non-traced) deltas are validated loudly here, traced
+        ones must be validated at construction (``make_delta`` does).
+        """
+        _validate_delta_weights(delta)
+        w = self.w.at[delta.edge_idx].set(delta.new_w, mode="drop")
+        in_weight = jax.ops.segment_min(
+            w, self.dst, num_segments=self.num_segments,
+            indices_are_sorted=True)[: self.n]
+        out_weight = jax.ops.segment_min(
+            w, self.src, num_segments=self.num_segments)[: self.n]
+        return dataclasses.replace(
+            self, w=w, in_weight=in_weight, out_weight=out_weight)
+
+    def to_host(self) -> "HostGraph":
+        """Host adjacency view of the REAL (non-padding) edges — the
+        inverse of ``HostGraph.to_device()``; reference algorithms check
+        mutated graphs through this."""
+        e = self.e
+        return HostGraph(self.n, np.asarray(self.src[:e]),
+                         np.asarray(self.dst[:e]), np.asarray(self.w[:e]))
+
+
+def _validate_delta_weights(delta) -> None:
+    """Loudly reject non-positive/NaN update weights (post-construction
+    mutation must keep the builder's ``w > 0`` invariant).  ALL rows are
+    checked, padding included — ``make_delta`` pads with 1.0, and
+    requiring positive fill keeps the Graph and EllGraph layouts'
+    validity judgments identical for any duck-typed delta.  Skipped for
+    traced values — the compiled dynamic-update path validates at
+    ``GraphDelta`` construction instead."""
+    if isinstance(delta.new_w, jax.core.Tracer):
+        return
+    new_w = np.asarray(delta.new_w)
+    if new_w.size and not (np.isfinite(new_w).all() and (new_w > 0).all()):
+        raise ValueError(
+            "apply_delta: update weights must be strictly positive and "
+            f"finite (got min={new_w.min()!r}, padding rows included); "
+            "the engine's fixing rules assume w > 0")
+
 
 def build_graph(n: int, src, dst, w, *, edge_pad_multiple: int = 128) -> Graph:
     """Build a device-ready Graph from numpy COO arrays (host-side)."""
@@ -151,6 +203,19 @@ class EllGraph:
     deg_pad: int = dataclasses.field(metadata=dict(static=True))
     in_src: jax.Array  # int32[n_pad, deg_pad]
     in_w: jax.Array    # float32[n_pad, deg_pad]
+
+    def apply_delta(self, delta) -> "EllGraph":
+        """New EllGraph with the same weight updates ``Graph.apply_delta``
+        applies — the dense layout's cell for edge i is ``(dst[i], rank
+        of i within its dst segment)``, precomputed by ``make_delta`` as
+        ``ell_row``/``ell_col`` (padding rows are out-of-bounds and
+        scatter-dropped).  Keeping both layouts updated by ONE delta is
+        what lets the ell/pallas backends re-solve incrementally without
+        a host-side rebuild."""
+        _validate_delta_weights(delta)
+        in_w = self.in_w.at[delta.ell_row, delta.ell_col].set(
+            delta.new_w, mode="drop")
+        return dataclasses.replace(self, in_w=in_w)
 
 
 def build_ell(n: int, src, dst, w, *, lane: int = 128, sublane: int = 8,

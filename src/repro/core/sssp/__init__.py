@@ -6,3 +6,6 @@ from repro.core.sssp.engine import (  # noqa: F401
 from repro.core.sssp.backends import Primitives  # noqa: F401
 from repro.core.sssp.solver import (  # noqa: F401
     BACKENDS, Solver, SSSPBatchResult)
+from repro.core.sssp.dynamic import (  # noqa: F401
+    DynamicSolver, GraphDelta, make_delta, make_delta_from_endpoints,
+    random_delta)

@@ -73,25 +73,89 @@ def make_sharded_solver(g: Graph, cfg: SSSPConfig = SP4_CONFIG,
     edge_spec = P(axes)          # shard edge arrays along the flat data axes
     vert_spec = P()              # vertex arrays (and sources) replicated
 
-    def body(src, dst, w, sources):
+    def body(src, dst, w, out_weight, sources):
         if on_trace is not None:
             on_trace()
-        # a device-local Graph view: same static metadata, local edge block
+        # a device-local Graph view: same static metadata, local edge
+        # block.  out_weight is an OPERAND (not the closed-over g's):
+        # the dynamic subsystem re-solves on mutated weights, and a
+        # stale out_weight would let the R_out rule fix too early.
         lg = dataclasses.replace(
-            g, e_pad=g.e_pad // n_shards, src=src, dst=dst, w=w)
+            g, e_pad=g.e_pad // n_shards, src=src, dst=dst, w=w,
+            out_weight=out_weight)
         prims = distributed_prims(lg, axes)
         return jax.vmap(lambda s: _solve(lg, cfg, s, prims=prims))(sources)
 
     fn = shard_map(
         body, mesh=mesh,
-        in_specs=(edge_spec, edge_spec, edge_spec, vert_spec),
+        in_specs=(edge_spec, edge_spec, edge_spec, vert_spec, vert_spec),
         out_specs=vert_spec, check_rep=False)
     jitted = jax.jit(fn)
 
-    def solve_batch(sources: jax.Array):
-        return jitted(g.src, g.dst, g.w, jnp.asarray(sources, jnp.int32))
+    def solve_batch(sources: jax.Array, graph: Graph | None = None):
+        # ``graph`` lets callers solve on a NEWER version of the same
+        # shape (the dynamic subsystem mutates weights between solves);
+        # default is the build-time graph.
+        gg = g if graph is None else graph
+        return jitted(gg.src, gg.dst, gg.w, gg.out_weight,
+                      jnp.asarray(sources, jnp.int32))
 
     return g, solve_batch
+
+
+def make_sharded_warm(g: Graph, cfg: SSSPConfig = SP4_CONFIG,
+                      mesh: Mesh | None = None,
+                      axes: tuple[str, ...] = ("data",), on_trace=None):
+    """Edge-sharded warm update+re-solve program (sssp/dynamic.py).
+
+    Returns a callable ``(g_old, ell_unused, delta, prev_D[B, n],
+    prev_fixed[B, n]) -> (g_new, None, states, sweeps, tainted)``
+    matching ``DynamicSolver._warm_program``.  The delta application and
+    the per-source taint *seeds* (which need global-index gathers into
+    the old edge arrays) run at the jit level outside ``shard_map``;
+    taint *propagation* and the warm rounds run inside it, against the
+    same ``distributed_prims`` the cold path uses — the warm while_loop
+    is the cold while_loop with a different entry state.
+
+    ``g_old`` must be the shard-padded graph ``make_sharded_solver``
+    returned (same static shape as ``g``).
+    """
+    from repro.core.sssp.engine import _solve_warm, delta_taint_seeds
+
+    if mesh is None:
+        mesh, axes = default_mesh()
+    n_shards = int(np.prod([mesh.shape[a] for a in axes]))
+    assert g.e_pad % n_shards == 0, "graph must be shard-padded"
+    edge_spec, vert_spec = P(axes), P()
+
+    def body(src, dst, w, out_weight, seeds, pure_inc, prev_D, prev_F):
+        if on_trace is not None:
+            on_trace()
+        lg = dataclasses.replace(
+            g, e_pad=g.e_pad // n_shards, src=src, dst=dst, w=w,
+            out_weight=out_weight)
+        prims = distributed_prims(lg, axes)
+        return jax.vmap(
+            lambda D0, f0, s, p: _solve_warm(lg, cfg, D0, f0, s, p,
+                                             prims=prims)
+        )(prev_D, prev_F, seeds, pure_inc)
+
+    sharded = shard_map(
+        body, mesh=mesh,
+        in_specs=(edge_spec, edge_spec, edge_spec) + (vert_spec,) * 5,
+        out_specs=vert_spec, check_rep=False)
+
+    @jax.jit
+    def warm(g_old: Graph, _ell, delta, prev_D, prev_F):
+        g_new = g_old.apply_delta(delta)
+        seeds, pure = jax.vmap(
+            lambda D0: delta_taint_seeds(g_old, delta, D0))(prev_D)
+        states, sweeps, taint = sharded(
+            g_new.src, g_new.dst, g_new.w, g_new.out_weight,
+            seeds, pure, prev_D, prev_F)
+        return g_new, None, states, sweeps, jnp.sum(taint, axis=1)
+
+    return warm
 
 
 def run_sssp_distributed(g: Graph, source: int = 0,

@@ -146,8 +146,124 @@ def _init_state(g: Graph, source) -> SSSPState:
                      round=jnp.int32(0), fixed_by=jnp.zeros(5, jnp.int32))
 
 
+def delta_taint_seeds(g_old: Graph, delta, D0: jax.Array):
+    """Taint seeds for a warm start: heads of increased-and-tight edges.
+
+    ``delta`` is a ``sssp.dynamic.GraphDelta`` (duck-typed: ``edge_idx``
+    int32[k_pad] into the dst-sorted edge arrays, padding ``>= e_pad``;
+    ``new_w`` float32[k_pad]).  ``g_old`` / ``D0`` are the graph and
+    distance vector the previous solve ran on.  Returns
+
+      seeds:         bool[n] — v such that some in-edge (u, v) both
+                     *increased* (new_w > old_w) and was *tight* under the
+                     old solve (D0[u] + w_old <= D0[v]).  Only through
+                     such an edge can an old distance certificate break.
+      pure_increase: bool scalar — no edge decreased, so every old D is
+                     still a valid LOWER bound (distances only grow) and
+                     the warm start may seed C with it.
+
+    Everything is jit-safe: invalid/padding delta rows are neutralized by
+    clipped gathers + the masked conditions, never by data-dependent
+    shapes.
+    """
+    valid = delta.edge_idx < g_old.e_pad
+    idx = jnp.minimum(delta.edge_idx, g_old.e_pad - 1)  # clip for gathers
+    w_old = g_old.w[idx]
+    src, dst = g_old.src[idx], g_old.dst[idx]
+    D0_ext = jnp.concatenate([D0, jnp.full((1,), INF, D0.dtype)])
+    Ds = D0_ext[jnp.minimum(src, g_old.n)]
+    Dd = D0_ext[jnp.minimum(dst, g_old.n)]
+    increased = valid & (delta.new_w > w_old)
+    tight = (Ds + w_old <= Dd) & (Ds < INF) & (Dd < INF)
+    seed_at = jnp.where(increased & tight, dst, g_old.n)  # n = drop
+    seeds = jnp.zeros((g_old.n,), bool).at[seed_at].set(True, mode="drop")
+    pure_increase = ~jnp.any(valid & (delta.new_w < w_old))
+    return seeds, pure_increase
+
+
+def _init_state_warm(g: Graph, prev_D: jax.Array, prev_fixed: jax.Array,
+                     seeds: jax.Array, pure_increase: jax.Array,
+                     prims: backends.Primitives | None = None):
+    """Warm-start state after a batch of weight changes (dynamic.py).
+
+    The *affected cone* (``taint``) is every vertex whose old distance
+    certificate may route through an increased edge: starting from the
+    ``delta_taint_seeds`` heads, taint propagates along tight edges
+    (D0[u] + w <= D0[v]) to a fixpoint via ``prims.relax``-style sweeps —
+    one relax per sweep, so a local delta costs a handful of sweeps, not
+    a re-solve.  Propagation may use the NEW weights: non-delta edges are
+    unchanged, decreased edges only get tighter (a superset — safe), and
+    increased edges need no propagation because their heads are already
+    seeds.  That keeps the warm program single-graph after the seeds are
+    computed (which is what lets the edge-sharded backend run it without
+    shipping the old weights into the mesh).
+
+    The cone is un-fixed with D reset to INF (its old bounds may now be
+    too LOW — the one staleness relaxation can never repair); everything
+    else keeps its old D and stays fixed.  Weight *decreases* need no
+    cone at all: they leave old bounds stale-HIGH, which the warm round
+    body heals by un-fixing on improvement (``_round(warm=True)``).
+    Under a pure-increase delta old distances are still valid lower
+    bounds, so C warm-starts at D0 for previously-fixed vertices and the
+    lb rule re-fixes the untouched parts of the cone immediately.
+
+    ``explored`` starts all-False so ``_cond`` forces at least one full
+    relaxation round over the surviving fixed set under the new weights.
+
+    Requires ``prev_fixed`` vertices to carry exact distances (any state
+    a completed cold or warm solve returns).  Returns ``(state, sweeps,
+    taint)`` with ``sweeps`` the number of propagation iterations.
+    """
+    if prims is None:
+        prims = backends.segment_prims(g)
+    n = g.n
+
+    def cond(carry):
+        _, changed, i = carry
+        return changed & (i < n + 1)
+
+    def body(carry):
+        taint, _, i = carry
+        reach = prims.relax(prev_D, taint)
+        taint2 = taint | ((reach <= prev_D) & (prev_D < INF))
+        return taint2, jnp.any(taint2 != taint), i + jnp.int32(1)
+
+    taint, _, sweeps = jax.lax.while_loop(
+        cond, body, (seeds, jnp.any(seeds), jnp.int32(0)))
+
+    fixed = prev_fixed & ~taint
+    D = jnp.where(taint, INF, prev_D)
+    C = jnp.where(
+        fixed, D,
+        jnp.where(pure_increase & prev_fixed & (prev_D < INF), prev_D, 0.0))
+    state = SSSPState(D=D, C=C, fixed=fixed,
+                      explored=jnp.zeros_like(fixed), round=jnp.int32(0),
+                      fixed_by=jnp.zeros(5, jnp.int32))
+    return state, sweeps, taint
+
+
+def _solve_warm(g: Graph, cfg: SSSPConfig, prev_D, prev_fixed, seeds,
+                pure_increase, prims: backends.Primitives | None = None):
+    """Warm re-solve to fixpoint on the (already-mutated) graph ``g``.
+
+    Same ``lax.while_loop``/round body as ``_solve``, entered from
+    ``_init_state_warm`` with ``warm=True`` rounds.  The round cap is
+    doubled vs cold: un-fix-on-improve can transiently re-open vertices,
+    so net-fixes-per-round is no longer >= 1 (termination itself is
+    guaranteed by per-vertex monotone D).  Returns (state, sweeps, taint).
+    """
+    state, sweeps, taint = _init_state_warm(
+        g, prev_D, prev_fixed, seeds, pure_increase, prims)
+    max_rounds = (2 * cfg.max_rounds) if cfg.max_rounds else 2 * g.n + 4
+    state = jax.lax.while_loop(
+        lambda s: _cond(s, max_rounds),
+        partial(_round, g, cfg, prims=prims, warm=True), state)
+    return state, sweeps, taint
+
+
 def _round(g: Graph, cfg: SSSPConfig, state: SSSPState,
-           prims: backends.Primitives | None = None) -> SSSPState:
+           prims: backends.Primitives | None = None,
+           warm: bool = False) -> SSSPState:
     """One bulk-synchronous round — THE round body.
 
     ``prims`` is the backend-primitives protocol (backends.py): segment
@@ -163,6 +279,15 @@ def _round(g: Graph, cfg: SSSPConfig, state: SSSPState,
 
     Note the pred rule needs no reduction of its own when the in rule is
     active: "no non-fixed in-edge" ⟺ inWeight_nf == +inf (§Perf 3.2).
+
+    ``warm=True`` enables the dynamic-graph repair move (sssp/dynamic.py):
+    a fixed vertex whose D the relaxation can still LOWER (possible only
+    when the state was warm-started across weight decreases — a cold solve
+    never lowers a fixed D) is un-fixed and rejoins the active set.  This
+    makes transiently-stale fixed vertices self-healing: D is monotone
+    non-increasing per vertex, so un-fix events are finite and the loop
+    still ends only when a full round changed nothing — at which point D
+    is a relaxation fixpoint with D[source]=0, i.e. exact.
     """
     if prims is None:
         prims = backends.segment_prims(g)
@@ -185,6 +310,16 @@ def _round(g: Graph, cfg: SSSPConfig, state: SSSPState,
         D_relax = prims.relax(D, relax_src)
         if need_inw:
             in_w_nf = prims.in_weight_nf(~fixed)
+    if warm:
+        # weight decreases can leave a warm-started fixed vertex stale-high;
+        # un-fix it the moment relaxation offers something strictly better
+        # (its old D stays a valid upper bound meanwhile, so the relax it
+        # sourced this round was still sound).
+        improved = fixed & (D_relax < D)
+        fixed = fixed & ~improved
+        # its C had been lifted to the now-stale D; drop it back to a
+        # trivially-valid lower bound before the lb rule sees it again.
+        C = jnp.where(improved, 0.0, C)
     D = jnp.where(~fixed, jnp.minimum(D, D_relax), D)
     explored = fixed  # all currently-fixed vertices are now relaxed-at-final-D
 

@@ -124,21 +124,27 @@ class Solver:
         def _count_trace():
             self.trace_count += 1  # python side effect: runs per TRACE
 
+        # ``ell`` rides through jit as a traced pytree operand (None
+        # for the segment backend): baked-in constants would bloat
+        # every compiled batch shape with the [n_pad, deg_pad] arrays.
+        def _prims(g, ell):
+            if ell is not None:
+                return backends.ell_prims(g, ell, cfg.use_pallas)
+            return backends.segment_prims(g)
+
+        self._make_prims = _prims  # DynamicSolver builds warm programs
+        self._mesh, self._axes = mesh, axes
+
         if backend == "distributed":
-            from repro.core.sssp.distributed import make_sharded_solver
+            from repro.core.sssp.distributed import (default_mesh,
+                                                     make_sharded_solver)
+            if mesh is None:
+                self._mesh, self._axes = default_mesh()
             self.graph, self._sharded_batch = make_sharded_solver(
-                graph, cfg, mesh, axes, on_trace=_count_trace)
+                graph, cfg, self._mesh, self._axes, on_trace=_count_trace)
             self._jit_one = None
             self._jit_batch = None
         else:
-            # ``ell`` rides through jit as a traced pytree operand (None
-            # for the segment backend): baked-in constants would bloat
-            # every compiled batch shape with the [n_pad, deg_pad] arrays.
-            def _prims(g, ell):
-                if ell is not None:
-                    return backends.ell_prims(g, ell, cfg.use_pallas)
-                return backends.segment_prims(g)
-
             def solve_one(g, ell, source):
                 _count_trace()
                 return _solve(g, cfg, source, prims=_prims(g, ell))
@@ -190,7 +196,7 @@ class Solver:
         padded = np.concatenate(
             [sources, np.full(b_pad - b, sources[-1], np.int32)])
         if self._sharded_batch is not None:
-            state = self._sharded_batch(padded)
+            state = self._sharded_batch(padded, self.graph)
         else:
             state = self._jit_batch(self.graph, self.ell,
                                     jnp.asarray(padded))

@@ -9,6 +9,11 @@ query stream with a Zipf-ish repeated-source distribution (the
 realistic serving regime: popular origins dominate), and reports
 queries/sec, batch count, and cache hit rate.  ``--verify`` re-checks a
 sample of answers against the host Dijkstra reference.
+
+``--deltas K`` interleaves K random weight deltas (``--delta-edges``
+edges each) between query waves — the dynamic-graph serving regime:
+each delta warm-refreshes the hot sources through the compiled
+incremental re-solve and version-stamps the rest of the cache stale.
 """
 from __future__ import annotations
 
@@ -32,6 +37,10 @@ def main() -> None:
                              "distributed"])
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--verify", action="store_true")
+    ap.add_argument("--deltas", type=int, default=0,
+                    help="weight deltas interleaved between query waves")
+    ap.add_argument("--delta-edges", type=int, default=None,
+                    help="edges per delta (default: 1%% of edges)")
     args = ap.parse_args()
 
     import numpy as np
@@ -51,8 +60,25 @@ def main() -> None:
                      target=int(rng.integers(0, n)))
                for _ in range(args.queries)]
 
+    waves = max(1, args.deltas + 1)
+    per_wave = -(-len(queries) // waves)   # ceil: exactly `waves` waves
     t0 = time.time()
-    service.serve(queries)
+    final_wave: list[Query] = queries
+    for i in range(0, len(queries), per_wave):
+        wave = queries[i: i + per_wave]
+        service.serve(wave)
+        final_wave = wave
+        if args.deltas and i + per_wave < len(queries):
+            from repro.sssp import random_delta
+            k = (max(1, hg.e // 100) if args.delta_edges is None
+                 else args.delta_edges)
+            dstats = service.apply_delta(
+                random_delta(service.solver.graph, k,
+                             seed=args.seed + 31 * i))
+            print(f"  delta v{service.version}: {k} edges, "
+                  f"warm-refreshed {dstats['warm_refreshed']} hot sources "
+                  f"in <= {max(dstats['warm_rounds'] or [0])} rounds "
+                  f"({dstats['sweeps']} taint sweeps)")
     dt = time.time() - t0
 
     st = service.stats
@@ -61,20 +87,25 @@ def main() -> None:
     print(f"answered {answered} queries in {dt:.2f}s "
           f"({answered / dt:.1f} queries/s)")
     print(f"  solve batches: {st['batches']}  sources solved: "
-          f"{st['sources_solved']}  cache hits: {st['cache_hits']}")
+          f"{st['sources_solved']}  cache hits: {st['cache_hits']}  "
+          f"deltas: {st['deltas']}")
     print(f"  device solve time: {st['solve_seconds']:.2f}s  "
           f"reachable targets: {reachable}/{answered}")
 
     if args.verify:
+        # verify against the CURRENT (post-delta) graph version; only the
+        # final wave's answers are guaranteed to reflect it.
         from repro.core.sssp.reference import dijkstra
+        final = final_wave
+        hg_now = service.solver.graph.to_host()
         bad = 0
-        for q in queries[:16]:
-            exp = dijkstra(hg, source=q.source).dist[q.target]
+        for q in final[:16]:
+            exp = dijkstra(hg_now, source=q.source).dist[q.target]
             got = q.distance if q.distance is not None else float("inf")
             exp = exp if np.isfinite(exp) else float("inf")
             if not np.isclose(got, exp, rtol=1e-5, atol=1e-4):
                 bad += 1
-        print(f"  verified 16 answers against dijkstra: "
+        print(f"  verified {min(len(final), 16)} answers against dijkstra: "
               f"{'OK' if bad == 0 else f'{bad} MISMATCHES'}")
         if bad:
             sys.exit(1)

@@ -7,10 +7,18 @@ sources, and the misses are batched into ``Solver.solve_batch`` calls —
 one compiled program execution answers up to ``batch`` sources at once,
 and every query against an already-solved source is a dictionary lookup.
 
+The service runs on a :class:`~repro.core.sssp.dynamic.DynamicSolver`,
+so the graph may change mid-flight: ``apply_delta`` applies a weight
+delta, *warm-refreshes* the hottest sources through the compiled
+incremental re-solve (instead of dropping the LRU), and version-stamps
+the cache so every remaining entry goes stale atomically — a stale hit
+is a miss, re-solved on demand against the new graph.
+
 This is the amortization story of Kainer & Träff made concrete: the
 engine's per-graph fixed costs (layout, compile) are paid once by the
-Solver, the per-source costs are shared across a batch, and the
-per-query cost of a repeated source is ~zero.
+Solver, the per-source costs are shared across a batch, the per-query
+cost of a repeated source is ~zero — and now the per-*delta* cost is a
+warm repair, not a cold restart.
 """
 from __future__ import annotations
 
@@ -21,22 +29,28 @@ from collections import OrderedDict
 import numpy as np
 
 from repro.core.sssp.engine import SP4_CONFIG, SSSPConfig, SSSPResult
-from repro.core.sssp.solver import Solver
+from repro.core.sssp.dynamic import DynamicSolver, GraphDelta
 
 
 @dataclasses.dataclass
 class Query:
-    """One shortest-path request; answered in place by the service."""
+    """One shortest-path request; answered in place by the service.
+
+    ``target=None`` asks for the whole distance vector: the service
+    attaches it as ``dist`` (float array over vertices) and leaves the
+    scalar ``distance``/``path`` fields None.
+    """
 
     source: int
     target: int | None = None     # None: whole distance vector wanted
     distance: float | None = None
     path: list[int] | None = None
+    dist: np.ndarray | None = None  # filled for target=None queries
     done: bool = False
 
 
 class SSSPService:
-    """Continuous-batching SSSP server over one graph.
+    """Continuous-batching SSSP server over one (mutable-weight) graph.
 
     Parameters mirror :class:`Solver`; ``batch`` is the number of source
     slots per solve (requests padded up to it reuse one compiled batch
@@ -46,29 +60,47 @@ class SSSPService:
     def __init__(self, graph, cfg: SSSPConfig = SP4_CONFIG,
                  backend: str = "auto", *, batch: int = 8,
                  cache_sources: int = 1024, **solver_kw):
-        self.solver = Solver(graph, cfg, backend, **solver_kw)
+        self.solver = DynamicSolver(graph, cfg, backend, **solver_kw)
         self.batch = int(batch)
         self.cache_sources = max(1, int(cache_sources))
-        self._cache: OrderedDict[int, SSSPResult] = OrderedDict()
+        # source -> (graph version at solve time, result); entries whose
+        # version trails the solver's are stale == misses.
+        self._cache: OrderedDict[int, tuple[int, SSSPResult]] = OrderedDict()
         self.stats = dict(queries=0, batches=0, sources_solved=0,
-                          cache_hits=0, solve_seconds=0.0)
+                          cache_hits=0, solve_seconds=0.0, deltas=0,
+                          delta_seconds=0.0, warm_refreshed=0)
 
     # ------------------------------------------------------------------
+    @property
+    def version(self) -> int:
+        """Graph version (number of deltas applied)."""
+        return self.solver.version
+
     def _lookup(self, source: int) -> SSSPResult | None:
-        res = self._cache.get(source)
-        if res is not None:
-            self._cache.move_to_end(source)
+        entry = self._cache.get(source)
+        if entry is None:
+            return None
+        ver, res = entry
+        if ver != self.version:        # stale: solved on an older graph
+            del self._cache[source]
+            return None
+        self._cache.move_to_end(source)
         return res
 
     def _admit(self, source: int, res: SSSPResult) -> None:
-        self._cache[source] = res
+        self._cache[source] = (self.version, res)
+        self._cache.move_to_end(source)
         while len(self._cache) > self.cache_sources:
             self._cache.popitem(last=False)
 
+    def _cached(self, source: int) -> bool:
+        entry = self._cache.get(source)
+        return entry is not None and entry[0] == self.version
+
     def _solve_missing(self, sources: list[int]) -> None:
-        """Batch-solve sources not in cache, ``self.batch`` at a time."""
+        """Batch-solve sources not freshly cached, ``self.batch`` at a time."""
         missing = [s for s in dict.fromkeys(sources)
-                   if s not in self._cache]
+                   if not self._cached(s)]
         for at in range(0, len(missing), self.batch):
             chunk = missing[at: at + self.batch]
             padded = chunk + [chunk[-1]] * (self.batch - len(chunk))
@@ -80,6 +112,36 @@ class SSSPService:
             for i, s in enumerate(chunk):
                 self._admit(s, batch_res[i])
             self.stats["sources_solved"] += len(chunk)
+
+    # ------------------------------------------------------------------
+    def apply_delta(self, delta: GraphDelta, *,
+                    refresh_hot: int | None = None) -> dict:
+        """Apply a weight delta; warm-refresh the hottest cached sources.
+
+        The ``refresh_hot`` most-recently-used cached sources (default:
+        one solve batch's worth; 0 = refresh nothing eagerly) are
+        re-solved eagerly through the DynamicSolver's compiled warm
+        program and re-admitted fresh; the rest of the LRU stays
+        resident but version-stamped stale, so it is re-solved lazily on
+        next touch instead of being dropped.  Returns the solver's
+        update stats.
+        """
+        k = self.batch if refresh_hot is None else int(refresh_hot)
+        hot = list(self._cache)[-k:] if k > 0 else []
+        t0 = time.perf_counter()
+        stats = self.solver.update(delta, refresh=hot)
+        if hot:
+            refreshed = self.solver.resolve(hot)  # tracked: no new solves
+            np.asarray(refreshed.dist)
+            for i, s in enumerate(hot):
+                self._admit(int(s), refreshed[i])
+        # delta work gets its own timer: solve_seconds stays consistent
+        # with batches/sources_solved (the query-path counters).
+        self.stats["delta_seconds"] += time.perf_counter() - t0
+        self.stats["deltas"] += 1
+        self.stats["warm_refreshed"] += stats["warm_refreshed"]
+        self.stats["sources_solved"] += stats["cold_refreshed"]
+        return stats
 
     # ------------------------------------------------------------------
     def serve(self, queries: list[Query]) -> list[Query]:
@@ -94,19 +156,27 @@ class SSSPService:
             raise ValueError(
                 f"{len(bad)} queries reference vertices outside [0, {n}): "
                 f"first bad query {bad[0]}")
-        # a hit = a query answered without triggering a solve (already
-        # cached, or coalesced onto another query's solve this wave).
-        misses = {q.source for q in queries} - self._cache.keys()
-        self.stats["cache_hits"] += len(queries) - len(misses)
+        # a hit = a query answered without a solve on its behalf: neither
+        # the first query of an initially-missing source (it pays for the
+        # batch solve) nor an eviction-triggered mid-wave re-solve.
+        misses = {q.source for q in queries
+                  if not self._cached(q.source)}
         self.stats["queries"] += len(queries)
         self._solve_missing([q.source for q in queries])
+        paid = set()   # missing sources whose triggering query is consumed
         for q in queries:
             res = self._lookup(q.source)
             if res is None:  # evicted mid-wave: cache smaller than the wave
                 self._solve_missing([q.source])
                 res = self._lookup(q.source)
+            elif q.source in misses and q.source not in paid:
+                paid.add(q.source)
+            else:
+                self.stats["cache_hits"] += 1
             if q.target is None:
+                q.dist = np.asarray(res.dist)
                 q.distance = None
+                q.path = None
             else:
                 q.distance = float(np.asarray(res.dist[q.target]))
                 q.path = (res.path_to(q.target)

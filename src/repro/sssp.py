@@ -13,12 +13,23 @@ kernels), "distributed" (edge-sharded shard_map over the mesh).  All run
 the same round body (engine._round) through the backend-primitives
 protocol (backends.Primitives).
 
+Dynamic graphs (weight streams) go through the dynamic subsystem:
+
+    dyn = sssp.DynamicSolver(graph)
+    dyn.solve_batch([0, 7])                      # tracked cold solves
+    delta = sssp.make_delta(dyn.graph, idx, w)   # jit-safe weight batch
+    dyn.update(delta)                            # warm incremental re-solve
+    dyn.resolve([0, 7])                          # post-update distances
+
 The legacy entry points ``run_sssp`` / ``run_sssp_ell`` /
 ``run_sssp_distributed`` remain importable here as deprecation shims.
 """
 from repro.core.graph import (  # noqa: F401
     EllGraph, Graph, HostGraph, build_ell, build_graph)
 from repro.core.sssp.backends import Primitives  # noqa: F401
+from repro.core.sssp.dynamic import (  # noqa: F401
+    DynamicSolver, GraphDelta, make_delta, make_delta_from_endpoints,
+    random_delta)
 from repro.core.sssp.engine import (  # noqa: F401
     SP1_RULES, SP2_RULES, SP3_RULES, SP3_CONFIG, SP4_CONFIG, SSSPConfig,
     SSSPResult, run_sssp, run_sssp_ell, run_sssp_traced)

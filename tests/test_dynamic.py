@@ -1,0 +1,316 @@
+"""Dynamic-graph subsystem: GraphDelta, coherent layout mutation, and
+warm-started incremental re-solve (core/sssp/dynamic.py)."""
+import numpy as np
+import pytest
+
+from repro.core import generators as gen
+from repro.core.graph import HostGraph, build_ell, build_graph
+from repro.core.sssp.reference import dijkstra
+from repro.runtime.sssp_service import Query, SSSPService
+from repro.sssp import (DynamicSolver, GraphDelta, Solver, make_delta,
+                        make_delta_from_endpoints, random_delta)
+
+FAMILIES = ["gnp", "dag", "unweighted", "grid", "power_law", "chain",
+            "geometric"]
+
+
+def _graph(family, n=200, seed=11):
+    nn, src, dst, w = gen.make(family, n, seed=seed)
+    return HostGraph(nn, src, dst, w)
+
+
+def _mutated_host(hg, g_new):
+    """HostGraph view of the device graph after deltas (same topology)."""
+    return g_new.to_host()
+
+
+# ---------------------------------------------------------------------------
+# GraphDelta + apply_delta layout coherence
+# ---------------------------------------------------------------------------
+
+def test_apply_delta_coherent_csc_and_ell():
+    """One delta must leave edge list, derived minima, and ELL equal to a
+    from-scratch rebuild on the mutated weights."""
+    hg = _graph("gnp", n=120, seed=3)
+    g = hg.to_device()
+    delta = random_delta(g, 17, seed=5)
+    g2 = g.apply_delta(delta)
+    ell2 = hg.to_ell().apply_delta(delta)
+
+    w_new = np.asarray(g.w[: g.e]).copy()
+    w_new[np.asarray(delta.edge_idx)[: delta.k]] = \
+        np.asarray(delta.new_w)[: delta.k]
+    rebuilt = build_graph(hg.n, np.asarray(g.src[: g.e]),
+                          np.asarray(g.dst[: g.e]), w_new)
+    np.testing.assert_array_equal(np.asarray(g2.w), np.asarray(rebuilt.w))
+    np.testing.assert_array_equal(np.asarray(g2.in_weight),
+                                  np.asarray(rebuilt.in_weight))
+    np.testing.assert_array_equal(np.asarray(g2.out_weight),
+                                  np.asarray(rebuilt.out_weight))
+    ell_rebuilt = build_ell(hg.n, np.asarray(g.src[: g.e]),
+                            np.asarray(g.dst[: g.e]), w_new)
+    np.testing.assert_array_equal(np.asarray(ell2.in_w),
+                                  np.asarray(ell_rebuilt.in_w))
+    # topology untouched
+    np.testing.assert_array_equal(np.asarray(g2.src), np.asarray(g.src))
+    np.testing.assert_array_equal(np.asarray(g2.in_deg),
+                                  np.asarray(g.in_deg))
+
+
+def test_make_delta_validates_and_dedups():
+    g = _graph("gnp", n=80, seed=1).to_device()
+    with pytest.raises(ValueError, match="positive"):
+        make_delta(g, [0], [0.0])
+    with pytest.raises(ValueError, match="positive"):
+        make_delta(g, [0], [-1.0])
+    with pytest.raises(ValueError, match="positive"):
+        make_delta(g, [0], [np.inf])
+    with pytest.raises(ValueError, match="edge"):
+        make_delta(g, [g.e], [1.0])   # padding edge: not updatable
+    with pytest.raises(ValueError, match="edge"):
+        make_delta(g, [-1], [1.0])
+    # duplicate indices: last write wins (stream semantics)
+    d = make_delta(g, [4, 4], [2.0, 3.0])
+    assert d.k == 1
+    g2 = g.apply_delta(d)
+    assert float(g2.w[4]) == 3.0
+
+
+def test_apply_delta_rejects_handbuilt_nonpositive():
+    """The Graph method itself guards concrete deltas (the builder assert
+    has a post-construction analogue)."""
+    import jax.numpy as jnp
+    g = _graph("gnp", n=80, seed=1).to_device()
+    bad = GraphDelta(k=1, edge_idx=jnp.array([0], jnp.int32),
+                     new_w=jnp.array([-2.0], jnp.float32),
+                     ell_row=jnp.array([0], jnp.int32),
+                     ell_col=jnp.array([0], jnp.int32))
+    with pytest.raises(ValueError, match="positive"):
+        g.apply_delta(bad)
+    with pytest.raises(ValueError, match="positive"):
+        _graph("gnp", n=80, seed=1).to_ell().apply_delta(bad)
+
+
+def test_make_delta_from_endpoints():
+    hg = _graph("grid", n=100, seed=2)
+    g = hg.to_device()
+    u, v = int(g.src[3]), int(g.dst[3])
+    d = make_delta_from_endpoints(g, [u], [v], [7.5])
+    g2 = g.apply_delta(d)
+    assert float(g2.w[3]) == 7.5
+    with pytest.raises(ValueError, match="not present"):
+        make_delta_from_endpoints(g, [u], [u], [1.0])
+
+
+# ---------------------------------------------------------------------------
+# Warm incremental re-solve: correctness (the acceptance property)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("family", FAMILIES)
+@pytest.mark.parametrize("backend", ["segment", "ell"])
+def test_dynamic_matches_cold_every_family(family, backend):
+    """Random delta sequences: warm-refreshed distances must EXACTLY match
+    a cold solve on the mutated graph (both converge to the unique float
+    relaxation fixpoint)."""
+    hg = _graph(family, n=160, seed=7)
+    dyn = DynamicSolver(hg.to_device(), backend=backend)
+    sources = [0, 3 % hg.n, 41 % hg.n]
+    dyn.solve_batch(sources)
+    for step in range(3):
+        delta = random_delta(dyn.graph, k=5 + 7 * step, seed=31 * step,
+                             lo=0.3, hi=3.0)
+        dyn.update(delta)
+        got = dyn.resolve(sources)
+        cold = Solver(dyn.graph, backend=backend).solve_batch(sources)
+        np.testing.assert_array_equal(np.asarray(got.dist),
+                                      np.asarray(cold.dist))
+
+
+def test_dynamic_matches_reference_dijkstra():
+    """Cross-check the mutated graph against the host reference."""
+    hg = _graph("geometric", n=150, seed=5)
+    dyn = DynamicSolver(hg.to_device())
+    dyn.solve(9)
+    dyn.update(random_delta(dyn.graph, 12, seed=8, lo=0.2, hi=4.0))
+    hg2 = _mutated_host(hg, dyn.graph)
+    exp = dijkstra(hg2, source=9).dist
+    got = np.asarray(dyn.resolve([9]).dist[0], np.float64)
+    np.testing.assert_allclose(np.where(np.isinf(got), 1e18, got),
+                               np.where(np.isinf(exp), 1e18, exp),
+                               rtol=1e-5, atol=1e-4)
+
+
+def test_distributed_backend_warm_update():
+    """The edge-sharded backend runs the same warm program (mesh of the
+    available devices; 1 on CPU CI)."""
+    hg = _graph("gnp", n=120, seed=4)
+    dyn = DynamicSolver(hg.to_device(), backend="distributed")
+    dyn.solve_batch([0, 9])
+    dyn.update(random_delta(dyn.graph, 6, seed=1))
+    got = dyn.resolve([0, 9])
+    cold = Solver(dyn.graph).solve_batch([0, 9])
+    np.testing.assert_array_equal(np.asarray(got.dist),
+                                  np.asarray(cold.dist))
+
+
+def test_pure_increase_and_pure_decrease_directions():
+    """Targeted monotonicity: increases can only raise distances,
+    decreases only lower them."""
+    hg = _graph("grid", n=100, seed=6)
+    dyn = DynamicSolver(hg.to_device())
+    base = np.asarray(dyn.solve(0).dist, np.float64)
+    e = dyn.graph.e
+    old_w = np.asarray(dyn.graph.w[:e])
+    idx = np.arange(0, e, 9)
+    dyn.update(make_delta(dyn.graph, idx, old_w[idx] * 3.0))
+    up = np.asarray(dyn.resolve([0]).dist[0], np.float64)
+    assert (up >= base - 1e-6).all()
+    dyn2 = DynamicSolver(hg.to_device())
+    dyn2.solve(0)
+    dyn2.update(make_delta(dyn2.graph, idx, old_w[idx] * 0.25))
+    down = np.asarray(dyn2.resolve([0]).dist[0], np.float64)
+    assert (down <= base + 1e-6).all()
+    assert (down < base - 1e-6).any()   # some real improvement happened
+
+
+# ---------------------------------------------------------------------------
+# Efficiency: fewer rounds than cold, no retrace per delta
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("family", ["chain", "grid"])
+def test_warm_fewer_rounds_than_cold(family):
+    """A small delta (<=1% of edges) must re-converge in strictly fewer
+    rounds than the cold solve on high-diameter families."""
+    hg = _graph(family, n=400, seed=13)
+    dyn = DynamicSolver(hg.to_device())
+    src = 0
+    dyn.solve(src)
+    k = max(1, hg.e // 100)
+    stats = dyn.update(random_delta(dyn.graph, k, seed=3))
+    warm_rounds = max(stats["warm_rounds"])
+    cold_rounds = Solver(dyn.graph).solve(src).rounds
+    assert warm_rounds < cold_rounds, (
+        f"{family}: warm {warm_rounds} rounds vs cold {cold_rounds}")
+
+
+def test_no_retrace_per_delta():
+    """Streaming same-shape deltas must reuse ONE compiled warm program;
+    a new delta shape or refresh-batch shape is a new (counted) trace."""
+    hg = _graph("gnp", n=120, seed=2)
+    dyn = DynamicSolver(hg.to_device())
+    dyn.solve_batch([0, 5])
+    for s in range(5):
+        dyn.update(random_delta(dyn.graph, 6, seed=s))
+    assert dyn.warm_trace_count == 1, "update() must not retrace per delta"
+    # k=6 and k=7 pad to the same k_pad=8 -> still no retrace
+    dyn.update(random_delta(dyn.graph, 7, seed=99))
+    assert dyn.warm_trace_count == 1
+    # graph version advanced once per delta
+    assert dyn.version == 6
+
+
+def test_update_stats_accounting():
+    hg = _graph("gnp", n=120, seed=8)
+    dyn = DynamicSolver(hg.to_device())
+    dyn.solve_batch([0, 7])
+    e = dyn.graph.e
+    old_w = np.asarray(dyn.graph.w[:e])
+    delta = make_delta(dyn.graph, [1, 2, 3],
+                       [old_w[1] * 2, old_w[2] * 0.5, old_w[3]])
+    stats = dyn.update(delta)
+    assert stats["edges_changed"] == 3
+    assert stats["increased"] == 1 and stats["decreased"] == 1
+    assert stats["warm_refreshed"] == 2 and stats["cold_refreshed"] == 0
+    assert len(stats["warm_rounds"]) == 2 and len(stats["tainted"]) == 2
+    # refresh of an untracked source goes through the cold path
+    stats2 = dyn.update(random_delta(dyn.graph, 3, seed=1),
+                        refresh=[0, 99])
+    assert stats2["warm_refreshed"] == 1 and stats2["cold_refreshed"] == 1
+
+
+def test_resolve_more_sources_than_tracker_capacity():
+    """The LRU state tracker may hold fewer states than one resolve()
+    names; answers must come straight from the batch result, not crash."""
+    hg = _graph("gnp", n=120, seed=14)
+    dyn = DynamicSolver(hg.to_device(), track_sources=4)
+    sources = list(range(12))
+    batch = dyn.resolve(sources)
+    cold = Solver(dyn.graph).solve_batch(sources)
+    np.testing.assert_array_equal(np.asarray(batch.dist),
+                                  np.asarray(cold.dist))
+    assert len(dyn._states) == 4   # capacity respected
+    # a FRESH source followed by enough misses to evict it mid-resolve:
+    # its row must come from the snapshot, not crash
+    dyn2 = DynamicSolver(hg.to_device(), track_sources=4)
+    dyn2.solve(0)
+    batch2 = dyn2.resolve(list(range(9)))
+    np.testing.assert_array_equal(np.asarray(batch2.dist),
+                                  np.asarray(cold.dist[:9]))
+
+
+def test_resolve_serves_fresh_sources_without_resolving():
+    hg = _graph("gnp", n=100, seed=9)
+    dyn = DynamicSolver(hg.to_device())
+    dyn.solve_batch([0, 4])
+    dyn.update(random_delta(dyn.graph, 4, seed=2))
+    before = dyn.trace_count
+    dyn.resolve([0, 4])       # warm-refreshed: no cold solve needed
+    assert dyn.trace_count == before
+    # a never-seen source triggers exactly one (batched) cold solve
+    batch = dyn.resolve([0, 8])
+    cold = Solver(dyn.graph).solve(8)
+    np.testing.assert_array_equal(np.asarray(batch.dist[1]),
+                                  np.asarray(cold.dist))
+
+
+# ---------------------------------------------------------------------------
+# Service integration: versioned cache + warm hot-source refresh
+# ---------------------------------------------------------------------------
+
+def test_service_apply_delta_serves_mutated_graph():
+    hg = _graph("gnp", n=200, seed=9)
+    service = SSSPService(hg.to_device(), batch=4)
+    rng = np.random.default_rng(1)
+    waves = [Query(source=s, target=int(rng.integers(0, hg.n)))
+             for s in (3, 17, 42, 63)]
+    service.serve(waves)
+    assert service.version == 0
+    stats = service.apply_delta(random_delta(service.solver.graph, 9,
+                                             seed=4, lo=0.3, hi=3.0))
+    assert service.version == 1
+    assert stats["warm_refreshed"] + stats["cold_refreshed"] == 4
+    hg2 = _mutated_host(hg, service.solver.graph)
+    # hot sources were warm-refreshed; 99 was never seen; both must
+    # answer against the NEW weights
+    wave2 = [Query(source=s, target=int(rng.integers(0, hg.n)))
+             for s in (3, 17, 99)]
+    service.serve(wave2)
+    for q in wave2:
+        exp = dijkstra(hg2, source=q.source).dist[q.target]
+        got = q.distance if q.distance is not None else np.inf
+        np.testing.assert_allclose(
+            np.nan_to_num(got, posinf=1e18),
+            np.nan_to_num(exp if np.isfinite(exp) else np.inf, posinf=1e18),
+            rtol=1e-5, atol=1e-4)
+    assert service.stats["deltas"] == 1
+    assert service.stats["warm_refreshed"] >= 1
+
+
+def test_service_stale_entries_not_served():
+    """A cached source NOT in the hot refresh set must be version-stamped
+    stale and re-solved on next touch — never served from the old graph."""
+    hg = _graph("chain", n=120, seed=3)
+    service = SSSPService(hg.to_device(), batch=2, cache_sources=64)
+    for s in (0, 1, 2, 3, 4, 5):
+        service.serve([Query(source=s, target=hg.n - 1)])
+    # refresh only the hottest 2; sources 0..3 go stale
+    e = service.solver.graph.e
+    old_w = np.asarray(service.solver.graph.w[:e])
+    service.apply_delta(
+        make_delta(service.solver.graph, [0], [old_w[0] * 50.0]),
+        refresh_hot=2)
+    hg2 = _mutated_host(hg, service.solver.graph)
+    q = Query(source=0, target=hg.n - 1)   # stale entry: must re-solve
+    service.serve([q])
+    exp = dijkstra(hg2, source=0).dist[hg.n - 1]
+    np.testing.assert_allclose(q.distance, exp, rtol=1e-5, atol=1e-4)

@@ -119,6 +119,59 @@ def test_service_answers_and_caches():
     assert service.stats["cache_hits"] >= 2
 
 
+def test_service_full_vector_query():
+    """Query(target=None) is 'whole distance vector wanted': the service
+    must attach it (q.dist), not silently answer nothing."""
+    hg = _graph("gnp", n=150, seed=12)
+    service = SSSPService(hg.to_device(), batch=2)
+    q = Query(source=7, target=None)
+    service.serve([q])
+    assert q.done and q.distance is None and q.path is None
+    assert q.dist is not None and q.dist.shape == (hg.n,)
+    assert_dist_equal(q.dist, dijkstra(hg, source=7).dist)
+    # scalar queries must NOT carry the vector field
+    q2 = Query(source=7, target=3)
+    service.serve([q2])
+    assert q2.dist is None and q2.distance is not None
+
+
+def test_service_eviction_mid_wave_resolves():
+    """cache_sources < wave size: sources evicted between the batch solve
+    and their query's turn must be re-solved, and every query answered."""
+    hg = _graph("gnp", n=200, seed=21)
+    service = SSSPService(hg.to_device(), batch=3, cache_sources=2)
+    wave_sources = [0, 11, 23, 37, 0, 11]
+    queries = [Query(source=s, target=(s + 1) % hg.n) for s in wave_sources]
+    service.serve(queries)
+    assert all(q.done for q in queries)
+    for q in queries:
+        exp = dijkstra(hg, source=q.source).dist[q.target]
+        got = q.distance if q.distance is not None else np.inf
+        np.testing.assert_allclose(
+            np.nan_to_num(got, posinf=1e18),
+            np.nan_to_num(exp if np.isfinite(exp) else np.inf, posinf=1e18),
+            rtol=1e-5, atol=1e-4)
+    # the eviction path re-solves: strictly more than the coalesced
+    # ceil(4 unique / batch=3) = 2 batches were needed
+    assert service.stats["batches"] > 2
+
+
+def test_service_stats_accounting():
+    hg = _graph("gnp", n=150, seed=22)
+    service = SSSPService(hg.to_device(), batch=2, cache_sources=64)
+    service.serve([Query(source=5, target=1), Query(source=9, target=2),
+                   Query(source=5, target=3)])
+    st = service.stats
+    assert st["queries"] == 3
+    assert st["sources_solved"] == 2          # 5 and 9, coalesced
+    assert st["batches"] == 1                 # one padded batch of 2
+    assert st["cache_hits"] == 1              # second query on source 5
+    assert st["solve_seconds"] > 0.0
+    service.serve([Query(source=9, target=8)])
+    assert st["queries"] == 4 and st["cache_hits"] == 2
+    assert st["sources_solved"] == 2 and st["batches"] == 1  # pure cache
+
+
 def test_deprecation_shims_route_through_solver_round():
     """run_sssp / run_sssp_ell / run_sssp_distributed still answer."""
     from repro.sssp import run_sssp, run_sssp_ell, run_sssp_distributed
