@@ -1,0 +1,171 @@
+"""Goal-directed point-to-point queries vs full solves: the ALT claim.
+
+A service that only needs ``dist[target]`` should not pay for the full
+fixpoint.  Per graph family this bench times and counts rounds for the
+same random (source, target) pairs under four modes of one Solver:
+
+  full        — untargeted solve to fixpoint (the PR-2 serving baseline)
+  exit        — targeted early exit, trivial bounds (C0 = 0)
+  seed        — targeted early exit + landmark-seeded lower bounds
+  seed_noexit — seeded bounds but no early exit (isolates what seeding
+                alone buys the lb rule; ``SSSPConfig(early_exit=False)``)
+
+``full``/``exit``/``seed`` share ONE compiled program (target and C0 are
+traced operands); ``seed_noexit`` compiles its own (static config knob).
+Landmark build cost is reported separately — it is preprocessing,
+amortized over the query stream.  Each invocation appends its rows to
+``experiments/bench/p2p.json`` so successive PRs accumulate a history.
+
+  python -m benchmarks.bench_p2p [--smoke] [--no-record]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+import numpy as np
+
+BENCH_JSON = os.path.join("experiments", "bench", "p2p.json")
+
+
+def _time(fn, reps: int) -> float:
+    best = float("inf")
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        fn()
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+def run(n: int = 2000, families=("chain", "grid", "gnp", "geometric"),
+        k_landmarks: int = 8, pairs: int = 8, backend: str = "segment",
+        reps: int = 3) -> list[dict]:
+    import jax
+    from repro.core import generators as gen
+    from repro.core.graph import HostGraph
+    from repro.core.sssp.engine import SP4_CONFIG, SSSPConfig
+    from repro.core.sssp.landmarks import LandmarkIndex
+    from repro.core.sssp.solver import Solver
+
+    import dataclasses
+    rows = []
+    for family in families:
+        nn, src, dst, w = gen.make(family, n, seed=0)
+        hg = HostGraph(nn, src, dst, w)
+        g = hg.to_device()
+        solver = Solver(g, backend=backend)
+        noexit = Solver(g, dataclasses.replace(SP4_CONFIG,
+                                               early_exit=False),
+                        backend=backend)
+
+        t0 = time.perf_counter()
+        index = LandmarkIndex(g, k_landmarks, backend=backend, seed=1)
+        jax.block_until_ready(index.d_from)
+        t_build = time.perf_counter() - t0
+
+        # random pairs with reachable targets (inf targets never exit
+        # early — they measure the fallback, not the claim)
+        rng = np.random.default_rng(7)
+        pts = []
+        while len(pts) < pairs:
+            s = int(rng.integers(nn))
+            d = np.asarray(solver.solve(s).dist)
+            reach = np.flatnonzero(np.isfinite(d) & (d > 0))
+            if reach.size:
+                pts.append((s, int(rng.choice(reach))))
+
+        def measure(mode):
+            def one_pass():
+                out = []
+                for s, t in pts:
+                    if mode == "full":
+                        r = solver.solve(s)
+                    elif mode == "exit":
+                        r = solver.solve(s, target=t)
+                    elif mode == "seed":
+                        r = solver.solve(s, target=t, C0=index.seed(s))
+                    else:   # seed_noexit
+                        r = noexit.solve(s, target=t, C0=index.seed(s))
+                    out.append(r)
+                jax.block_until_ready(out[-1].dist)
+                return out
+            results = one_pass()            # warm compile + collect rounds
+            secs = _time(one_pass, reps)
+            return ([r.rounds for r in results],
+                    secs * 1000.0 / len(pts))
+
+        rounds, ms = {}, {}
+        for mode in ("full", "exit", "seed", "seed_noexit"):
+            rounds[mode], ms[mode] = measure(mode)
+
+        rows.append({
+            "family": family, "n": nn, "e": hg.e, "backend": backend,
+            "k_landmarks": k_landmarks, "pairs": pairs,
+            "rounds_full": int(np.mean(rounds["full"])),
+            "rounds_exit": int(np.mean(rounds["exit"])),
+            "rounds_seed": int(np.mean(rounds["seed"])),
+            "rounds_seed_noexit": int(np.mean(rounds["seed_noexit"])),
+            "ms_full": round(ms["full"], 3),
+            "ms_exit": round(ms["exit"], 3),
+            "ms_seed": round(ms["seed"], 3),
+            "round_ratio_exit": round(
+                float(np.mean(rounds["full"]))
+                / max(float(np.mean(rounds["exit"])), 1.0), 2),
+            "round_ratio_seed": round(
+                float(np.mean(rounds["full"]))
+                / max(float(np.mean(rounds["seed"])), 1.0), 2),
+            "speedup_seed": round(ms["full"] / max(ms["seed"], 1e-9), 2),
+            "t_landmark_build_s": round(t_build, 3),
+            "traces": solver.trace_count,
+        })
+    return rows
+
+
+def record(rows: list[dict], path: str = BENCH_JSON) -> None:
+    """Append this run's rows to the json trajectory (list of runs)."""
+    os.makedirs(os.path.dirname(path), exist_ok=True)
+    traj = []
+    if os.path.exists(path):
+        with open(path) as f:
+            traj = json.load(f)
+    traj.append({"ts": time.strftime("%Y-%m-%dT%H:%M:%S"), "rows": rows})
+    with open(path, "w") as f:
+        json.dump(traj, f, indent=1)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="small sizes, single rep (CI)")
+    ap.add_argument("--n", type=int, default=None)
+    ap.add_argument("--backend", default="segment")
+    ap.add_argument("--no-record", action="store_true")
+    args = ap.parse_args()
+
+    n = args.n or (400 if args.smoke else 2000)
+    reps = 1 if args.smoke else 3
+    pairs = 4 if args.smoke else 8
+    rows = run(n=n, pairs=pairs, backend=args.backend, reps=reps)
+    for r in rows:
+        print(r)
+    # the PR's claim: targeted queries beat full solves (fewer rounds OR
+    # lower latency) on at least two families
+    good = [r["family"] for r in rows
+            if r["round_ratio_seed"] >= 1.3 or r["speedup_seed"] > 1.0]
+    if len(good) < 2:
+        raise SystemExit(
+            f"goal-directed queries not beating full solves on >=2 "
+            f"families (got {good}): {rows}")
+    # solver programs must stay shared across modes/pairs
+    bad_traces = [r for r in rows if r["traces"] != 1]
+    if bad_traces:
+        raise SystemExit(f"targeted solves retraced: {bad_traces}")
+    if not args.no_record:
+        record(rows)
+        print(f"appended to {BENCH_JSON}")
+
+
+if __name__ == "__main__":
+    main()

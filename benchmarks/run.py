@@ -7,6 +7,7 @@
   bench_throughput  — engine vs Bellman-Ford vs delta-stepping (CPU)
   bench_batch       — batched multi-source Solver + serving queries/sec
   bench_dynamic     — warm incremental re-solve vs cold after weight deltas
+  bench_p2p         — goal-directed point-to-point vs full solves (ALT)
   bench_kernels     — kernel microbench (jnp path)
 
 ``python -m benchmarks.run [--quick]`` prints CSV blocks per bench.
@@ -40,8 +41,8 @@ def main() -> None:
     args = ap.parse_args()
 
     from benchmarks import (bench_batch, bench_dynamic, bench_heap_ops,
-                            bench_kernels, bench_optimality, bench_rounds,
-                            bench_throughput)
+                            bench_kernels, bench_optimality, bench_p2p,
+                            bench_rounds, bench_throughput)
 
     n = 600 if args.quick else 2000
     sizes = (1000, 4000) if args.quick else (2000, 8000, 32000)
@@ -58,6 +59,9 @@ def main() -> None:
             n=400 if args.quick else 2000,
             fractions=(0.01, 0.10) if args.quick else (0.005, 0.02, 0.10),
             deltas_per_point=1 if args.quick else 3),
+        "p2p": lambda: bench_p2p.run(
+            n=400 if args.quick else 2000, pairs=4 if args.quick else 8,
+            reps=1 if args.quick else 3),
         "kernels": bench_kernels.run,
     }
     t_all = time.time()

@@ -130,6 +130,22 @@ class Graph:
         return HostGraph(self.n, np.asarray(self.src[:e]),
                          np.asarray(self.dst[:e]), np.asarray(self.w[:e]))
 
+    def reverse(self, **kw) -> "Graph":
+        """The transpose graph: every edge (u, v, w) becomes (v, u, w).
+
+        Distances from L on ``reverse()`` are distances TO L on the
+        original — the d(·, L) half of the landmark (ALT) tables.  The
+        edge list is re-sorted by the new destinations, so forward edge
+        ``i`` lands at position ``argsort(src, stable)⁻¹[i]`` of the
+        reverse list (sssp/landmarks.py precomputes that permutation to
+        remap :class:`GraphDelta` batches).  Preprocessing-time only —
+        builds host-side.
+        """
+        e = self.e
+        return build_graph(self.n, np.asarray(self.dst[:e]),
+                           np.asarray(self.src[:e]),
+                           np.asarray(self.w[:e]), **kw)
+
 
 def _validate_delta_weights(delta) -> None:
     """Loudly reject non-positive/NaN update weights (post-construction
@@ -269,3 +285,7 @@ class HostGraph:
 
     def to_ell(self, **kw) -> EllGraph:
         return build_ell(self.n, self.src, self.dst, self.w, **kw)
+
+    def reverse(self) -> "HostGraph":
+        """The transpose graph (edges flipped, weights kept)."""
+        return HostGraph(self.n, self.dst, self.src, self.w)

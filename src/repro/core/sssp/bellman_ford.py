@@ -24,8 +24,20 @@ class BFResult:
     rounds: int
 
 
-@partial(jax.jit, static_argnames=("source", "max_rounds"))
-def _run(g: Graph, source: int, max_rounds: int):
+_TRACE_COUNT = [0]
+
+
+def trace_count() -> int:
+    """XLA traces of ``_run`` performed so far (no-retrace regression)."""
+    return _TRACE_COUNT[0]
+
+
+# ``source`` is a TRACED int32 operand (not a static argname): k distinct
+# sources on one graph shape share a single compilation, mirroring the
+# Solver's traced-source discipline.
+@partial(jax.jit, static_argnames=("max_rounds",))
+def _run(g: Graph, source, max_rounds: int):
+    _TRACE_COUNT[0] += 1  # python side effect: runs once per XLA trace
     D0 = jnp.full((g.n,), INF, jnp.float32).at[source].set(0.0)
 
     def body(carry):
@@ -47,5 +59,5 @@ def _run(g: Graph, source: int, max_rounds: int):
 
 def run_bellman_ford(g: Graph, source: int = 0,
                      max_rounds: int | None = None) -> BFResult:
-    D, rounds = _run(g, source, max_rounds or g.n + 1)
+    D, rounds = _run(g, jnp.int32(source), max_rounds or g.n + 1)
     return BFResult(dist=D, rounds=int(rounds))

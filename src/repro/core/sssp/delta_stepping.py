@@ -32,8 +32,21 @@ class DeltaResult:
     light_iters: int
 
 
-@partial(jax.jit, static_argnames=("source", "max_phases"))
-def _run(g: Graph, source: int, delta: float, max_phases: int):
+_TRACE_COUNT = [0]
+
+
+def trace_count() -> int:
+    """XLA traces of ``_run`` performed so far (no-retrace regression)."""
+    return _TRACE_COUNT[0]
+
+
+# ``source`` is a TRACED int32 operand (not a static argname): k distinct
+# sources on one graph shape share a single compilation — the same
+# discipline as the Solver's traced-source programs, and what keeps the
+# baseline's benchmark numbers free of per-source recompiles.
+@partial(jax.jit, static_argnames=("max_phases",))
+def _run(g: Graph, source, delta, max_phases: int):
+    _TRACE_COUNT[0] += 1  # python side effect: runs once per XLA trace
     D0 = jnp.full((g.n,), INF, jnp.float32).at[source].set(0.0)
     settled0 = jnp.zeros((g.n,), bool)
     light = g.w <= delta  # static edge partition
@@ -83,5 +96,6 @@ def _run(g: Graph, source: int, delta: float, max_phases: int):
 
 def run_delta_stepping(g: Graph, source: int = 0, delta: float = 0.25,
                        max_phases: int | None = None) -> DeltaResult:
-    D, phases, liters = _run(g, source, float(delta), max_phases or g.n + 1)
+    D, phases, liters = _run(g, jnp.int32(source), jnp.float32(delta),
+                             max_phases or g.n + 1)
     return DeltaResult(dist=D, phases=int(phases), light_iters=int(liters))

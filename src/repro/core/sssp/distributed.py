@@ -73,7 +73,7 @@ def make_sharded_solver(g: Graph, cfg: SSSPConfig = SP4_CONFIG,
     edge_spec = P(axes)          # shard edge arrays along the flat data axes
     vert_spec = P()              # vertex arrays (and sources) replicated
 
-    def body(src, dst, w, out_weight, sources):
+    def body(src, dst, w, out_weight, sources, targets, C0):
         if on_trace is not None:
             on_trace()
         # a device-local Graph view: same static metadata, local edge
@@ -84,21 +84,33 @@ def make_sharded_solver(g: Graph, cfg: SSSPConfig = SP4_CONFIG,
             g, e_pad=g.e_pad // n_shards, src=src, dst=dst, w=w,
             out_weight=out_weight)
         prims = distributed_prims(lg, axes)
-        return jax.vmap(lambda s: _solve(lg, cfg, s, prims=prims))(sources)
+        return jax.vmap(
+            lambda s, t, c: _solve(lg, cfg, s, prims=prims, C0=c, target=t)
+        )(sources, targets, C0)
 
     fn = shard_map(
         body, mesh=mesh,
-        in_specs=(edge_spec, edge_spec, edge_spec, vert_spec, vert_spec),
+        in_specs=(edge_spec, edge_spec, edge_spec) + (vert_spec,) * 4,
         out_specs=vert_spec, check_rep=False)
     jitted = jax.jit(fn)
 
-    def solve_batch(sources: jax.Array, graph: Graph | None = None):
+    def solve_batch(sources: jax.Array, graph: Graph | None = None,
+                    targets=None, C0=None):
         # ``graph`` lets callers solve on a NEWER version of the same
         # shape (the dynamic subsystem mutates weights between solves);
-        # default is the build-time graph.
+        # default is the build-time graph.  ``targets``/``C0`` are the
+        # goal-directed operands (replicated, like the vertex state):
+        # -1 sentinel = untargeted lane, zeros = trivial lower bounds.
         gg = g if graph is None else graph
-        return jitted(gg.src, gg.dst, gg.w, gg.out_weight,
-                      jnp.asarray(sources, jnp.int32))
+        sources = jnp.asarray(sources, jnp.int32)
+        b = sources.shape[0]
+        if targets is None:
+            targets = jnp.full((b,), -1, jnp.int32)
+        if C0 is None:
+            C0 = jnp.zeros((b, g.n), jnp.float32)
+        return jitted(gg.src, gg.dst, gg.w, gg.out_weight, sources,
+                      jnp.asarray(targets, jnp.int32),
+                      jnp.asarray(C0, jnp.float32))
 
     return g, solve_batch
 

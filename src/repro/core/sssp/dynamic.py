@@ -262,18 +262,24 @@ class DynamicSolver(Solver):
             return st
         return None
 
-    def solve(self, source: int) -> SSSPResult:
-        res = super().solve(source)
-        self._track(int(source), D=res.dist, C=res.C, fixed=res.fixed,
-                    rounds=res.rounds, fixed_by=res.fixed_by)
+    def solve(self, source: int, target: int | None = None,
+              C0=None) -> SSSPResult:
+        res = super().solve(source, target=target, C0=C0)
+        # partial (early-exited) results are NOT tracked: unfixed entries
+        # are upper bounds, and the warm re-solve would first have to
+        # finish the solve they skipped — a full state is the asset here.
+        if not res.partial:
+            self._track(int(source), D=res.dist, C=res.C, fixed=res.fixed,
+                        rounds=res.rounds, fixed_by=res.fixed_by)
         return res
 
-    def solve_batch(self, sources) -> SSSPBatchResult:
-        batch = super().solve_batch(sources)
-        for i, s in enumerate(batch.sources):
-            self._track(int(s), D=batch.dist[i], C=batch.C[i],
-                        fixed=batch.fixed[i], rounds=batch.rounds[i],
-                        fixed_by=batch.fixed_by[i])
+    def solve_batch(self, sources, targets=None, C0=None) -> SSSPBatchResult:
+        batch = super().solve_batch(sources, targets=targets, C0=C0)
+        if not batch.partial:
+            for i, s in enumerate(batch.sources):
+                self._track(int(s), D=batch.dist[i], C=batch.C[i],
+                            fixed=batch.fixed[i], rounds=batch.rounds[i],
+                            fixed_by=batch.fixed_by[i])
         return batch
 
     # ------------------------------------------------------------------

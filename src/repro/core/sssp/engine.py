@@ -58,6 +58,9 @@ class SSSPConfig:
     c_prop_iters: int = 1            # Eqn-(1) applications per round
     max_rounds: int | None = None    # default n
     use_pallas: bool = False         # route relax through the Pallas kernel
+    early_exit: bool = True          # targeted solves stop once the target
+    #   is fixed AND explored (ablation knob for the goal-directed path;
+    #   has no effect on untargeted solves)
 
     def __post_init__(self):
         unknown = self.rules - {"min", "pred", "in", "out", "lb"}
@@ -107,6 +110,13 @@ class SSSPResult:
     trace: list | None = None
     source: int | None = None
     graph: Graph | None = None
+    target: int | None = None     # the goal of a targeted (p2p) solve
+    partial: bool = False         # early-exited: only FIXED vertices carry
+    #   exact distances (dist[target] always does); unfixed entries are
+    #   upper bounds.  ``path_to(target)`` remains exact on a partial
+    #   result: every feasible parent u of an exact vertex v satisfies
+    #   d(s,u) <= D[u] and d(s,u)+w >= d(s,v) = D[u]+w, so D[u] is exact
+    #   and on a shortest path — the walked chain never leaves exactness.
     _parents: np.ndarray | None = dataclasses.field(
         default=None, repr=False, compare=False)
 
@@ -136,11 +146,21 @@ def _fixed_by_dict(fixed_by) -> dict[str, int]:
     return {r: int(c) for r, c in zip(_RULE_ORDER, fb)}
 
 
-def _init_state(g: Graph, source) -> SSSPState:
+def _init_state(g: Graph, source, C0=None) -> SSSPState:
     """``source`` may be a python int or a traced int32 scalar — keeping it
-    traced is what lets the Solver vmap over sources without retracing."""
+    traced is what lets the Solver vmap over sources without retracing.
+
+    ``C0`` (optional float32[n]) seeds the LOWER bounds with non-trivial
+    values — e.g. landmark/ALT bounds (sssp/landmarks.py).  Caller's
+    contract: ``C0[v] <= d(source, v)`` for every v (``+inf`` is allowed
+    and asserts unreachability).  Seeded bounds let the lb rule fix
+    vertices rounds earlier; invalid seeds give wrong distances.
+    """
     D = jnp.full((g.n,), INF, jnp.float32).at[source].set(0.0)
-    C = jnp.zeros((g.n,), jnp.float32)
+    if C0 is None:
+        C = jnp.zeros((g.n,), jnp.float32)
+    else:
+        C = jnp.maximum(C0.astype(jnp.float32), 0.0)
     fixed = jnp.zeros((g.n,), bool)
     return SSSPState(D=D, C=C, fixed=fixed, explored=fixed,
                      round=jnp.int32(0), fixed_by=jnp.zeros(5, jnp.int32))
@@ -388,19 +408,34 @@ def _round(g: Graph, cfg: SSSPConfig, state: SSSPState,
         fixed_by=state.fixed_by + jnp.stack(rule_counts))
 
 
-def _cond(state: SSSPState, max_rounds: int):
+def _cond(state: SSSPState, max_rounds: int, target=None):
+    """Keep-going predicate.  ``target`` (python None, or an int32 scalar
+    with sentinel ``-1`` = none, possibly traced) enables goal-directed
+    early exit: once the target is fixed (D[target] certified exact by
+    the fixing-rule lemmas) AND explored (its out-edges relaxed at final
+    D), the remaining rounds can no longer change dist[target] — stop.
+    An unreachable target is never discovered, so the loop falls back to
+    the normal drain-to-fixpoint termination."""
     active = (state.D < INF) & ~state.fixed
     pending = state.fixed & ~state.explored  # fixed but not yet relaxed
-    return (jnp.any(active) | jnp.any(pending)) & (state.round < max_rounds)
+    go = (jnp.any(active) | jnp.any(pending)) & (state.round < max_rounds)
+    if target is not None:
+        t = jnp.maximum(target, 0)           # clamp sentinel for the gather
+        t_done = (target >= 0) & state.fixed[t] & state.explored[t]
+        go = go & ~t_done
+    return go
 
 
 def _solve(g: Graph, cfg: SSSPConfig, source,
-           prims: backends.Primitives | None = None) -> SSSPState:
-    """while_loop to fixpoint; ``source`` may be traced (vmap-able)."""
-    state = _init_state(g, source)
+           prims: backends.Primitives | None = None,
+           C0=None, target=None) -> SSSPState:
+    """while_loop to fixpoint (or to ``target`` fixed, when given);
+    ``source``/``target``/``C0`` may all be traced (vmap-able)."""
+    state = _init_state(g, source, C0)
     max_rounds = cfg.max_rounds or g.n + 2
+    tgt = target if cfg.early_exit else None
     return jax.lax.while_loop(
-        lambda s: _cond(s, max_rounds),
+        lambda s: _cond(s, max_rounds, tgt),
         partial(_round, g, cfg, prims=prims), state)
 
 

@@ -1,0 +1,224 @@
+"""Landmark (ALT-style) preprocessing: goal-directed lower-bound seeds.
+
+The paper's engine maintains lower bounds ``C`` alongside upper bounds
+``D`` — but every cold solve starts from the trivial ``C = 0``, so the
+lb rule (fix when ``C == D``) only fires once the in-graph Eqn-(1)
+propagation has caught up.  Landmarks give the lb rule a head start:
+precompute exact distance tables from/to a few well-spread vertices, and
+the triangle inequality turns them into *non-trivial initial lower
+bounds* for any query source ``s``:
+
+    d(s, v)  >=  d(L, v) - d(L, s)        (forward table, d(L, ·))
+    d(s, v)  >=  d(s, L) - d(v, L)        (backward table, d(·, L))
+
+    C0[v] = max(0, max_L(d(L,v) - d(L,s)), max_L(d(s,L) - d(v,L)))
+
+This is the classic ALT preprocessing (Goldberg & Harrelson) recast into
+the paper's dual-bound machinery — instead of steering a priority queue,
+the bounds are fed straight into ``engine._init_state`` where the lb
+rule consumes them, and combined with the traced ``target`` early exit
+(``engine._cond``) they make point-to-point queries terminate rounds
+before the full fixpoint.  This is the heuristic-search direction of
+Yu et al. (arXiv:2506.19349) grafted onto Garg's criteria engine.
+
+Construction uses only existing machinery: ``d(L, ·)`` rows are plain
+``Solver`` solves from each landmark, ``d(·, L)`` rows are solves on the
+transpose graph (:meth:`Graph.reverse`), and landmark selection is the
+farthest-point heuristic driven by the same solver.
+
+Dynamic graphs: the tables are just ``k`` more tracked sources.
+:meth:`LandmarkIndex.apply_delta` routes a :class:`GraphDelta` through
+the owning forward ``DynamicSolver`` (shared mode) and a private reverse
+``DynamicSolver`` (the delta's edge indices remapped through the
+precomputed forward→reverse permutation), warm-refreshing the tables.
+With ``refresh=False`` the tables go stale — still *valid* lower bounds
+while every delta since the last refresh only increased weights (old
+distances only under-estimate a grown metric), so seeding stays on; the
+first decrease flips ``seed_ok`` off and :meth:`seed` degrades to "no
+seed" until the next refresh.  Targeted solves stay exact either way —
+seeding only ever accelerates fixing when the bounds are valid.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.graph import Graph, HostGraph
+from repro.core.sssp.engine import SP4_CONFIG, SSSPConfig
+from repro.core.sssp.dynamic import DynamicSolver, GraphDelta, make_delta
+
+
+def seed_lower_bounds(d_from: jax.Array, d_to: jax.Array,
+                      source) -> jax.Array:
+    """jit-able ALT seed: float32[n] lower bounds on d(source, ·).
+
+    ``d_from[L, v] = d(landmark_L, v)`` and ``d_to[L, v] = d(v,
+    landmark_L)`` are the [k, n] tables; ``source`` may be traced — one
+    broadcast max over the tables, no per-query host work.
+
+    +inf entries are *information*, not failure: ``d(L,v) = inf`` with
+    ``d(L,s)`` finite proves v unreachable from s (a path s→v would
+    extend L→s→v), so the bound +inf is valid; likewise ``d(s,L) = inf``
+    with ``d(v,L)`` finite.  Only inf−inf (landmark sees neither or
+    both endpoints at inf) carries no information and drops to −inf
+    before the max.
+    """
+    ds = d_from[:, source][:, None]   # [k, 1]  d(L, s)
+    ts = d_to[:, source][:, None]     # [k, 1]  d(s, L)
+    fwd = d_from - ds                 # d(L, v) − d(L, s)
+    bwd = ts - d_to                   # d(s, L) − d(v, L)
+    fwd = jnp.where(jnp.isnan(fwd), -jnp.inf, fwd)
+    bwd = jnp.where(jnp.isnan(bwd), -jnp.inf, bwd)
+    best = jnp.max(jnp.maximum(fwd, bwd), axis=0)
+    return jnp.maximum(best, 0.0).astype(jnp.float32)
+
+
+def select_landmarks(solver, k: int, *, seed: int = 0,
+                     first: int | None = None) -> np.ndarray:
+    """Farthest-point landmark selection via the existing Solver.
+
+    Greedy: start from ``first`` (default: random), then repeatedly add
+    the vertex maximizing the distance to its nearest already-chosen
+    landmark (finite distances only — an unreachable vertex is "far"
+    from everything and would hoard picks; if nothing reachable remains,
+    fall back to a random unused vertex so disconnected components still
+    get coverage).  k solves, one compiled program.
+    """
+    n = solver.graph.n
+    k = max(1, min(int(k), n))
+    rng = np.random.default_rng(seed)
+    lms = [int(first) if first is not None else int(rng.integers(n))]
+    d_min = np.asarray(solver.solve(lms[0]).dist, np.float64)
+    while len(lms) < k:
+        cand = np.where(np.isfinite(d_min), d_min, -1.0)
+        cand[np.asarray(lms)] = -1.0
+        nxt = int(np.argmax(cand))
+        if cand[nxt] <= 0.0:
+            unused = np.setdiff1d(np.arange(n), np.asarray(lms))
+            if unused.size == 0:
+                break
+            nxt = int(rng.choice(unused))
+        lms.append(nxt)
+        d_min = np.minimum(d_min,
+                           np.asarray(solver.solve(nxt).dist, np.float64))
+    return np.asarray(lms, np.int32)
+
+
+class LandmarkIndex:
+    """Landmark distance tables + seeded lower bounds over one graph.
+
+    Parameters
+    ----------
+    graph:   device :class:`Graph` or :class:`HostGraph`.
+    k:       number of landmarks (tables cost two [k, n] device arrays).
+    solver:  optional *shared* forward :class:`DynamicSolver` — the one
+             the serving layer already runs.  The landmark solves are
+             then tracked sources of that solver ("k more sources") and
+             ride its compiled warm-refresh programs through deltas.
+             When omitted, the index owns a private forward solver.
+    cfg/backend/seed: engine config, backend, selection RNG seed for the
+             owned solvers (ignored for the forward side in shared mode).
+
+    ``seed(source)`` / ``seed_batch(sources)`` return ``C0`` arrays for
+    ``Solver.solve(source, target=t, C0=...)`` — or ``None`` when the
+    tables can no longer vouch for validity (weight decrease without
+    refresh), which callers pass through as "no seed".
+    """
+
+    def __init__(self, graph, k: int = 8, *, cfg: SSSPConfig = SP4_CONFIG,
+                 backend: str = "segment", seed: int = 0,
+                 solver: DynamicSolver | None = None):
+        if isinstance(graph, HostGraph):
+            graph = graph.to_device()
+        if not isinstance(graph, Graph):
+            raise TypeError(f"graph must be Graph/HostGraph, "
+                            f"got {type(graph)!r}")
+        self.k = max(1, min(int(k), graph.n))
+        self._shared = solver is not None
+        self._fwd = solver if solver is not None else DynamicSolver(
+            graph, cfg, backend)
+        self._rev = DynamicSolver(graph.reverse(), cfg, backend)
+        # forward edge i (dst-sorted) sits at row rev_perm[i] of the
+        # reverse graph's edge list: Graph.reverse() feeds build_graph in
+        # forward-index order, which re-sorts stably by the new dst
+        # (= forward src).  This is what remaps GraphDelta batches.
+        e = graph.e
+        order = np.argsort(np.asarray(graph.src[:e]), kind="stable")
+        self._rev_perm = np.empty(e, np.int64)
+        self._rev_perm[order] = np.arange(e)
+        self._seed_one = jax.jit(seed_lower_bounds)
+        self._seed_many = jax.jit(
+            jax.vmap(seed_lower_bounds, in_axes=(None, None, 0)))
+        self.d_from: jax.Array | None = None   # float32[k, n]  d(L, v)
+        self.d_to: jax.Array | None = None     # float32[k, n]  d(v, L)
+        self.stale = False
+        self.seed_ok = True
+        self.landmarks = select_landmarks(self._fwd, self.k, seed=seed)
+        self.refresh()
+
+    # ------------------------------------------------------------------
+    def refresh(self) -> None:
+        """Recompute both tables on the solvers' current graphs.
+
+        Warm-refreshed tracked states answer this without new cold
+        solves when the deltas went through :meth:`apply_delta` with
+        ``refresh=True``; otherwise the stale sources re-solve here.
+        """
+        lms = [int(v) for v in self.landmarks]
+        self.d_from = jnp.asarray(self._fwd.resolve(lms).dist)
+        self.d_to = jnp.asarray(self._rev.resolve(lms).dist)
+        self.stale = False
+        self.seed_ok = True
+
+    def seed(self, source: int) -> jax.Array | None:
+        """C0 float32[n] for one query source (None: seeding unsound)."""
+        if not self.seed_ok:
+            return None
+        return self._seed_one(self.d_from, self.d_to, jnp.int32(source))
+
+    def seed_batch(self, sources) -> jax.Array | None:
+        """C0 float32[B, n] for a batch of sources (None: unsound)."""
+        if not self.seed_ok:
+            return None
+        return self._seed_many(self.d_from, self.d_to,
+                               jnp.asarray(sources, jnp.int32))
+
+    # ------------------------------------------------------------------
+    def reverse_delta(self, delta: GraphDelta) -> GraphDelta:
+        """The same weight updates, as a delta on the transpose graph."""
+        kk = delta.k
+        idx = np.asarray(delta.edge_idx)[:kk]
+        w = np.asarray(delta.new_w)[:kk]
+        return make_delta(self._rev.graph, self._rev_perm[idx], w)
+
+    def apply_delta(self, delta: GraphDelta, *,
+                    refresh: bool = True) -> dict:
+        """Keep the index coherent with a forward-graph weight delta.
+
+        In shared mode call this AFTER the owning solver's ``update``
+        (the forward side is then already mutated and — if the landmarks
+        were in its refresh list — warm-refreshed); in standalone mode
+        the index updates its own forward solver too.  The reverse
+        solver always updates here, through the remapped delta.
+
+        ``refresh=False`` defers the table rebuild: the tables go stale,
+        and stay usable as seeds only while no delta since the last
+        refresh decreased a weight (stale exact distances of a
+        weights-only-grew graph are still valid lower bounds); the first
+        decrease disables seeding until :meth:`refresh`.  Returns the
+        reverse solver's update stats (same counters as
+        ``DynamicSolver.update``).
+        """
+        lms = [int(v) for v in self.landmarks]
+        want = lms if refresh else []
+        rev_stats = self._rev.update(self.reverse_delta(delta), refresh=want)
+        if not self._shared:
+            self._fwd.update(delta, refresh=want)
+        if refresh:
+            self.refresh()
+        else:
+            self.stale = True
+            if rev_stats["decreased"]:
+                self.seed_ok = False
+        return rev_stats

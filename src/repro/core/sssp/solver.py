@@ -40,6 +40,11 @@ class SSSPBatchResult:
     ``dist``/``C``/``fixed`` have a leading batch dim; ``rounds`` is the
     per-source round count.  ``result(i)`` (or ``batch[i]``) views one
     source as a plain :class:`SSSPResult` with lazy parents/paths.
+
+    ``targets``/``partial`` mark goal-directed (point-to-point) batches:
+    each lane may have early-exited once its own target was fixed, so
+    only fixed vertices of a partial lane carry exact distances
+    (``dist[i, targets[i]]`` always does).
     """
 
     sources: np.ndarray      # int32[B]
@@ -49,15 +54,21 @@ class SSSPBatchResult:
     rounds: np.ndarray       # int32[B]
     fixed_by: list[dict[str, int]]
     graph: Graph | None = None
+    targets: np.ndarray | None = None   # int32[B] (-1 = untargeted lane)
+    partial: bool = False               # lanes may have early-exited
 
     def __len__(self) -> int:
         return len(self.sources)
 
     def result(self, i: int) -> SSSPResult:
+        t = None
+        if self.targets is not None and int(self.targets[i]) >= 0:
+            t = int(self.targets[i])
         return SSSPResult(
             dist=self.dist[i], C=self.C[i], fixed=self.fixed[i],
             rounds=int(self.rounds[i]), fixed_by=self.fixed_by[i],
-            source=int(self.sources[i]), graph=self.graph)
+            source=int(self.sources[i]), graph=self.graph,
+            target=t, partial=self.partial and t is not None)
 
     __getitem__ = result
 
@@ -104,8 +115,14 @@ class Solver:
                             f"got {type(graph)!r}")
         if backend == "auto":
             backend = "pallas" if cfg.use_pallas else "segment"
+        # normalize cfg.use_pallas to the chosen backend in BOTH
+        # directions: "pallas" forces it on, every other backend forces
+        # it off — otherwise SSSPConfig(use_pallas=True) silently routes
+        # the "ell" backend through the Pallas kernels.
         if backend == "pallas":
             cfg = dataclasses.replace(cfg, use_pallas=True)
+        elif cfg.use_pallas:
+            cfg = dataclasses.replace(cfg, use_pallas=False)
         self.graph = graph
         self.cfg = cfg
         self.backend = backend
@@ -145,47 +162,76 @@ class Solver:
             self._jit_one = None
             self._jit_batch = None
         else:
-            def solve_one(g, ell, source):
+            # target (int32, -1 = none) and C0 (lower-bound seeds) are
+            # TRACED operands like the source: targeted, seeded, and
+            # plain solves all share one compiled program per shape.
+            def solve_one(g, ell, source, target, C0):
                 _count_trace()
-                return _solve(g, cfg, source, prims=_prims(g, ell))
+                return _solve(g, cfg, source, prims=_prims(g, ell),
+                              C0=C0, target=target)
 
-            def solve_many(g, ell, sources):
+            def solve_many(g, ell, sources, targets, C0):
                 _count_trace()
                 return jax.vmap(
-                    lambda s: _solve(g, cfg, s,
-                                     prims=_prims(g, ell)))(sources)
+                    lambda s, t, c: _solve(g, cfg, s, prims=_prims(g, ell),
+                                           C0=c, target=t)
+                )(sources, targets, C0)
 
             self._jit_one = jax.jit(solve_one)
             self._jit_batch = jax.jit(solve_many)
             self._sharded_batch = None
 
     # ------------------------------------------------------------------
-    def _check_sources(self, sources: np.ndarray) -> None:
+    def _check_sources(self, sources: np.ndarray, what: str = "source") -> None:
         # out-of-range indices would be silently DROPPED by jax .at[].set
         # under jit (all-INF distances), so reject them loudly here.
+        sources = np.asarray(sources, np.int64)
         bad = sources[(sources < 0) | (sources >= self.graph.n)]
         if bad.size:
             raise ValueError(
-                f"source vertices {bad.tolist()} out of range "
+                f"{what} vertices {bad.tolist()} out of range "
                 f"[0, {self.graph.n})")
 
-    def solve(self, source: int) -> SSSPResult:
-        """Distances from one source (compiled once per graph shape)."""
-        self._check_sources(np.asarray([source], np.int64))
+    def solve(self, source: int, target: int | None = None,
+              C0=None) -> SSSPResult:
+        """Distances from one source (compiled once per graph shape).
+
+        ``target`` switches on the goal-directed fast path: the solve
+        early-exits once ``dist[target]`` is certified exact (result
+        stamped ``partial=True`` — only fixed vertices carry exact
+        distances; ``path_to(target)`` stays exact).  ``C0`` optionally
+        seeds the lower bounds, e.g. ``LandmarkIndex.seed(source)``.
+        """
+        self._check_sources([source])
+        if target is not None:
+            self._check_sources([target], what="target")
         if self._jit_one is None:  # distributed: batch of one
-            return self.solve_batch([source])[0]
-        state = self._jit_one(self.graph, self.ell, jnp.int32(source))
+            return self.solve_batch(
+                [source], targets=None if target is None else [target],
+                C0=None if C0 is None else jnp.asarray(C0)[None])[0]
+        t = jnp.int32(-1 if target is None else int(target))
+        c0 = (jnp.zeros((self.graph.n,), jnp.float32) if C0 is None
+              else jnp.asarray(C0, jnp.float32))
+        state = self._jit_one(self.graph, self.ell, jnp.int32(source), t, c0)
+        partial = target is not None and self.cfg.early_exit
         return SSSPResult(
             dist=state.D, C=state.C, fixed=state.fixed,
             rounds=int(state.round), fixed_by=_fixed_by_dict(state.fixed_by),
-            source=int(source), graph=self.graph)
+            source=int(source), graph=self.graph,
+            target=target, partial=partial)
 
-    def solve_batch(self, sources) -> SSSPBatchResult:
+    def solve_batch(self, sources, targets=None, C0=None) -> SSSPBatchResult:
         """Distances from B sources via one vmapped program.
 
         The batch is right-padded (repeating the last source) to the next
         power of two so arbitrary request counts reuse a handful of
         compiled batch shapes; padding lanes are sliced off the result.
+
+        ``targets`` (int32[B], optional) makes every lane a goal-directed
+        point-to-point solve (see :meth:`solve`); under vmap a lane
+        freezes once its own target is fixed, so the batch runs for the
+        max over lanes of the per-lane (early-exited) round counts.
+        ``C0`` (float32[B, n], optional) seeds per-lane lower bounds.
         """
         sources = np.asarray(sources, np.int32).ravel()
         if sources.size == 0:
@@ -195,15 +241,41 @@ class Solver:
         b_pad = _next_pow2(b)
         padded = np.concatenate(
             [sources, np.full(b_pad - b, sources[-1], np.int32)])
+        if targets is None:
+            tpad = np.full(b_pad, -1, np.int32)
+        else:
+            targets = np.asarray(targets, np.int32).ravel()
+            if targets.size != b:
+                raise ValueError(f"targets {targets.shape} must match "
+                                 f"sources ({b},)")
+            self._check_sources(targets, what="target")
+            # pad with the last lane's target (not -1): an untargeted
+            # padding lane would run to full fixpoint and dominate rounds
+            tpad = np.concatenate(
+                [targets, np.full(b_pad - b, targets[-1], np.int32)])
+        if C0 is None:
+            c0 = jnp.zeros((b_pad, self.graph.n), jnp.float32)
+        else:
+            c0 = jnp.asarray(C0, jnp.float32)
+            if c0.shape != (b, self.graph.n):
+                raise ValueError(f"C0 shape {c0.shape} != "
+                                 f"({b}, {self.graph.n})")
+            if b_pad > b:
+                c0 = jnp.concatenate(
+                    [c0, jnp.broadcast_to(c0[-1:], (b_pad - b,
+                                                    self.graph.n))])
         if self._sharded_batch is not None:
-            state = self._sharded_batch(padded, self.graph)
+            state = self._sharded_batch(padded, self.graph, tpad, c0)
         else:
             state = self._jit_batch(self.graph, self.ell,
-                                    jnp.asarray(padded))
+                                    jnp.asarray(padded),
+                                    jnp.asarray(tpad), c0)
         fb = np.asarray(state.fixed_by)
         return SSSPBatchResult(
             sources=sources,
             dist=state.D[:b], C=state.C[:b], fixed=state.fixed[:b],
             rounds=np.asarray(state.round[:b]),
             fixed_by=[_fixed_by_dict(fb[i]) for i in range(b)],
-            graph=self.graph)
+            graph=self.graph,
+            targets=None if targets is None else targets,
+            partial=targets is not None and self.cfg.early_exit)

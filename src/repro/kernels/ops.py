@@ -33,11 +33,19 @@ def relax_ell(D: jax.Array, ell: EllGraph, src_mask: jax.Array,
 
     D: float32[n]; src_mask: bool[n] (which sources may relax).
     Returns float32[n] (ELL padding rows dropped).
+
+    ELL padding cells carry ``in_src == n`` (one past the vertex range)
+    and ``in_w == +inf``.  Instead of concatenating a sentinel row onto
+    ``D``/``src_mask`` on every call — twice per round inside the hot
+    ``while_loop`` — the gather index is clamped and padding cells are
+    masked out: the padding contribution is +inf either way (masked
+    ``where``, and ``in_w`` is +inf there regardless), so results are
+    bitwise identical to the sentinel-row formulation.
     """
-    D_ext = jnp.concatenate([D, jnp.array([jnp.inf], D.dtype)])
-    m_ext = jnp.concatenate([src_mask, jnp.array([False])])
-    d_src = D_ext[ell.in_src]          # [n_pad, deg_pad] XLA gather
-    mask = m_ext[ell.in_src]
+    idx = jnp.minimum(ell.in_src, ell.n - 1)   # clamp: pure gathers below
+    in_range = ell.in_src < ell.n
+    d_src = D[idx]                     # [n_pad, deg_pad] XLA gather
+    mask = in_range & src_mask[idx]
     if _use_pallas(use_pallas):
         out = _relax_pallas(d_src, ell.in_w, mask)
     else:

@@ -14,6 +14,10 @@ sample of answers against the host Dijkstra reference.
 edges each) between query waves — the dynamic-graph serving regime:
 each delta warm-refreshes the hot sources through the compiled
 incremental re-solve and version-stamps the rest of the cache stale.
+
+``--landmarks K`` builds a K-landmark index and routes scalar-target
+queries through the goal-directed fast path (seeded lower bounds +
+early-exit targeted solves) instead of full per-source solves.
 """
 from __future__ import annotations
 
@@ -41,6 +45,9 @@ def main() -> None:
                     help="weight deltas interleaved between query waves")
     ap.add_argument("--delta-edges", type=int, default=None,
                     help="edges per delta (default: 1%% of edges)")
+    ap.add_argument("--landmarks", type=int, default=0,
+                    help="landmark count for the goal-directed fast path "
+                         "(0 = full solves, the pre-PR-3 serving path)")
     args = ap.parse_args()
 
     import numpy as np
@@ -53,7 +60,8 @@ def main() -> None:
     print(f"graph: {args.family} n={n} e={hg.e}  backend={args.backend}")
 
     service = SSSPService(hg.to_device(), backend=args.backend,
-                          batch=args.batch)
+                          batch=args.batch,
+                          landmarks=args.landmarks or None)
     rng = np.random.default_rng(args.seed)
     hot = rng.choice(n, size=min(args.hot_sources, n), replace=False)
     queries = [Query(source=int(rng.choice(hot)),
@@ -87,8 +95,8 @@ def main() -> None:
     print(f"answered {answered} queries in {dt:.2f}s "
           f"({answered / dt:.1f} queries/s)")
     print(f"  solve batches: {st['batches']}  sources solved: "
-          f"{st['sources_solved']}  cache hits: {st['cache_hits']}  "
-          f"deltas: {st['deltas']}")
+          f"{st['sources_solved']}  targeted solves: {st['p2p_solves']}  "
+          f"cache hits: {st['cache_hits']}  deltas: {st['deltas']}")
     print(f"  device solve time: {st['solve_seconds']:.2f}s  "
           f"reachable targets: {reachable}/{answered}")
 

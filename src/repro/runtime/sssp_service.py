@@ -14,11 +14,22 @@ incremental re-solve (instead of dropping the LRU), and version-stamps
 the cache so every remaining entry goes stale atomically — a stale hit
 is a miss, re-solved on demand against the new graph.
 
+Goal-directed serving (``landmarks=``/``p2p=``): a ``Query(target=t)``
+no longer pays for the whole distance vector — it takes the targeted
+fast path (``Solver.solve_batch(..., targets=...)``), early-exiting each
+lane once its own target is fixed, with lower bounds seeded from a
+:class:`~repro.core.sssp.landmarks.LandmarkIndex`.  The partial results
+this produces are admitted to the cache stamped ``partial=True``: they
+answer later queries only for vertices their ``fixed`` mask certifies
+exact, and they NEVER satisfy a full-vector lookup (``distances()`` /
+``Query(target=None)``), so a partial entry cannot poison a full one.
+
 This is the amortization story of Kainer & Träff made concrete: the
 engine's per-graph fixed costs (layout, compile) are paid once by the
 Solver, the per-source costs are shared across a batch, the per-query
 cost of a repeated source is ~zero — and now the per-*delta* cost is a
-warm repair, not a cold restart.
+warm repair, not a cold restart, and the per-*target* cost is rounds
+proportional to the goal, not the graph.
 """
 from __future__ import annotations
 
@@ -30,6 +41,7 @@ import numpy as np
 
 from repro.core.sssp.engine import SP4_CONFIG, SSSPConfig, SSSPResult
 from repro.core.sssp.dynamic import DynamicSolver, GraphDelta
+from repro.core.sssp.landmarks import LandmarkIndex
 
 
 @dataclasses.dataclass
@@ -55,20 +67,53 @@ class SSSPService:
     Parameters mirror :class:`Solver`; ``batch`` is the number of source
     slots per solve (requests padded up to it reuse one compiled batch
     shape), ``cache_sources`` bounds the LRU of solved sources.
+
+    Goal-directed serving:
+
+    ``landmarks``
+        ``int k`` builds a :class:`LandmarkIndex` with k landmarks
+        SHARING this service's DynamicSolver (the landmark tables are k
+        more tracked sources, warm-refreshed through deltas); a
+        pre-built index is used as-is; ``None`` disables seeding.
+    ``p2p``
+        route ``Query(target=t)`` through targeted early-exit solves
+        (default: on exactly when ``landmarks`` is given; ``p2p=True``
+        alone gives early exit with trivial bounds).
+    ``refresh_landmarks``
+        eagerly rebuild the landmark tables on every ``apply_delta``
+        (default).  ``False`` defers: stale tables keep seeding only
+        while deltas are pure weight increases, and seeding drops after
+        the first decrease until the index is refreshed.
     """
 
     def __init__(self, graph, cfg: SSSPConfig = SP4_CONFIG,
                  backend: str = "auto", *, batch: int = 8,
-                 cache_sources: int = 1024, **solver_kw):
+                 cache_sources: int = 1024,
+                 landmarks: int | LandmarkIndex | None = None,
+                 p2p: bool | None = None, refresh_landmarks: bool = True,
+                 landmark_seed: int = 0, **solver_kw):
         self.solver = DynamicSolver(graph, cfg, backend, **solver_kw)
         self.batch = int(batch)
         self.cache_sources = max(1, int(cache_sources))
-        # source -> (graph version at solve time, result); entries whose
-        # version trails the solver's are stale == misses.
-        self._cache: OrderedDict[int, tuple[int, SSSPResult]] = OrderedDict()
+        # source -> (version at solve time, result, partial); entries
+        # whose version trails the solver's are stale == misses; partial
+        # entries only answer targets their fixed mask certifies.
+        self._cache: OrderedDict[
+            int, tuple[int, SSSPResult, bool]] = OrderedDict()
+        self.landmarks: LandmarkIndex | None = None
+        if isinstance(landmarks, LandmarkIndex):
+            self.landmarks = landmarks
+        elif landmarks is not None:
+            self.landmarks = LandmarkIndex(
+                self.solver.graph, int(landmarks), cfg=self.solver.cfg,
+                backend=backend if backend != "auto" else "segment",
+                seed=landmark_seed, solver=self.solver)
+        self.p2p = bool(self.landmarks is not None if p2p is None else p2p)
+        self.refresh_landmarks = bool(refresh_landmarks)
         self.stats = dict(queries=0, batches=0, sources_solved=0,
                           cache_hits=0, solve_seconds=0.0, deltas=0,
-                          delta_seconds=0.0, warm_refreshed=0)
+                          delta_seconds=0.0, warm_refreshed=0,
+                          p2p_solves=0)
 
     # ------------------------------------------------------------------
     @property
@@ -76,26 +121,41 @@ class SSSPService:
         """Graph version (number of deltas applied)."""
         return self.solver.version
 
-    def _lookup(self, source: int) -> SSSPResult | None:
+    def _lookup(self, source: int,
+                target: int | None = None) -> SSSPResult | None:
+        """Fresh cached result usable for this request, else None.
+
+        A full entry answers anything; a partial entry answers only a
+        scalar ``target`` its ``fixed`` mask certifies exact — and never
+        a full-vector request (``target=None``).
+        """
         entry = self._cache.get(source)
         if entry is None:
             return None
-        ver, res = entry
+        ver, res, partial = entry
         if ver != self.version:        # stale: solved on an older graph
             del self._cache[source]
             return None
+        if partial:
+            if target is None or not bool(np.asarray(res.fixed[target])):
+                return None            # keep the entry: other targets may hit
         self._cache.move_to_end(source)
         return res
 
-    def _admit(self, source: int, res: SSSPResult) -> None:
-        self._cache[source] = (self.version, res)
+    def _admit(self, source: int, res: SSSPResult, *,
+               partial: bool = False) -> None:
+        if partial and self._cached(source):
+            return  # never downgrade a fresh full entry to a partial one
+        self._cache[source] = (self.version, res, partial)
         self._cache.move_to_end(source)
         while len(self._cache) > self.cache_sources:
             self._cache.popitem(last=False)
 
     def _cached(self, source: int) -> bool:
+        """Fresh FULL entry present (partial entries don't count)."""
         entry = self._cache.get(source)
-        return entry is not None and entry[0] == self.version
+        return (entry is not None and entry[0] == self.version
+                and not entry[2])
 
     def _solve_missing(self, sources: list[int]) -> None:
         """Batch-solve sources not freshly cached, ``self.batch`` at a time."""
@@ -118,18 +178,36 @@ class SSSPService:
                     refresh_hot: int | None = None) -> dict:
         """Apply a weight delta; warm-refresh the hottest cached sources.
 
-        The ``refresh_hot`` most-recently-used cached sources (default:
-        one solve batch's worth; 0 = refresh nothing eagerly) are
-        re-solved eagerly through the DynamicSolver's compiled warm
+        The ``refresh_hot`` most-recently-used *fully*-cached sources
+        (default: one solve batch's worth; 0 = refresh nothing eagerly;
+        partial entries are skipped — there is no full state to repair)
+        are re-solved eagerly through the DynamicSolver's compiled warm
         program and re-admitted fresh; the rest of the LRU stays
         resident but version-stamped stale, so it is re-solved lazily on
-        next touch instead of being dropped.  Returns the solver's
-        update stats.
+        next touch instead of being dropped.  The landmark index (if
+        any) rides the same update: its forward tables are tracked
+        sources of this solver, its reverse tables go through the
+        remapped delta; with ``refresh_landmarks=False`` the tables go
+        stale and seeding survives only pure-increase deltas.  Returns
+        the solver's update stats.
         """
         k = self.batch if refresh_hot is None else int(refresh_hot)
-        hot = list(self._cache)[-k:] if k > 0 else []
+        hot: list[int] = []
+        if k > 0:   # newest-first walk for the k hottest FULL entries
+            for s in reversed(self._cache):
+                if len(hot) == k:
+                    break
+                if not self._cache[s][2]:
+                    hot.append(s)
+            hot.reverse()
         t0 = time.perf_counter()
-        stats = self.solver.update(delta, refresh=hot)
+        eager_lm = self.landmarks is not None and self.refresh_landmarks
+        lms = ([int(v) for v in self.landmarks.landmarks]
+               if eager_lm else [])
+        stats = self.solver.update(
+            delta, refresh=list(dict.fromkeys(hot + lms)))
+        if self.landmarks is not None:
+            self.landmarks.apply_delta(delta, refresh=eager_lm)
         if hot:
             refreshed = self.solver.resolve(hot)  # tracked: no new solves
             np.asarray(refreshed.dist)
@@ -145,7 +223,12 @@ class SSSPService:
 
     # ------------------------------------------------------------------
     def serve(self, queries: list[Query]) -> list[Query]:
-        """Answer a wave of queries in place (distance + path)."""
+        """Answer a wave of queries in place (distance + path).
+
+        With ``p2p`` on, scalar-target queries take the goal-directed
+        path (targeted early-exit solves, landmark-seeded when an index
+        is attached); full-vector queries always take the full path.
+        """
         n = self.solver.graph.n
         bad = [q for q in queries
                if not (0 <= q.source < n
@@ -156,6 +239,18 @@ class SSSPService:
             raise ValueError(
                 f"{len(bad)} queries reference vertices outside [0, {n}): "
                 f"first bad query {bad[0]}")
+        if not self.p2p:
+            return self._serve_full(queries)
+        full_q = [q for q in queries if q.target is None]
+        tgt_q = [q for q in queries if q.target is not None]
+        if full_q:
+            self._serve_full(full_q)
+        if tgt_q:
+            self._serve_p2p(tgt_q)
+        return queries
+
+    def _serve_full(self, queries: list[Query]) -> list[Query]:
+        """Original path: full solve per (cache-missing) source."""
         # a hit = a query answered without a solve on its behalf: neither
         # the first query of an initially-missing source (it pays for the
         # batch solve) nor an eviction-triggered mid-wave re-solve.
@@ -181,6 +276,65 @@ class SSSPService:
                 q.distance = float(np.asarray(res.dist[q.target]))
                 q.path = (res.path_to(q.target)
                           if np.isfinite(q.distance) else None)
+            q.done = True
+        return queries
+
+    def _serve_p2p(self, queries: list[Query]) -> list[Query]:
+        """Goal-directed path for scalar-target queries.
+
+        Cache first (full entries answer anything; partial entries
+        answer targets their ``fixed`` mask certifies); remaining
+        (source, target) pairs are batched into targeted early-exit
+        solves — landmark-seeded when the index vouches for its bounds —
+        and the partial results admitted ``partial=True``.  Answers come
+        from the wave-local results dict, so mid-wave eviction can never
+        orphan a query.
+        """
+        self.stats["queries"] += len(queries)
+        hits: dict[int, SSSPResult] = {}
+        need: list[tuple[int, int]] = []
+        for q in queries:
+            res = self._lookup(q.source, target=q.target)
+            if res is not None:
+                hits[id(q)] = res
+            else:
+                need.append((q.source, q.target))
+        need = list(dict.fromkeys(need))
+        solved: dict[tuple[int, int], SSSPResult] = {}
+        for at in range(0, len(need), self.batch):
+            chunk = need[at: at + self.batch]
+            padded = chunk + [chunk[-1]] * (self.batch - len(chunk))
+            srcs = [s for s, _ in padded]
+            tgts = [t for _, t in padded]
+            t0 = time.perf_counter()
+            C0 = (self.landmarks.seed_batch(srcs)
+                  if self.landmarks is not None else None)
+            batch_res = self.solver.solve_batch(srcs, targets=tgts, C0=C0)
+            np.asarray(batch_res.dist)  # block: count device time honestly
+            self.stats["solve_seconds"] += time.perf_counter() - t0
+            self.stats["batches"] += 1
+            self.stats["p2p_solves"] += len(chunk)
+            for i, (s, t) in enumerate(chunk):
+                res = batch_res[i]
+                solved[(s, t)] = res
+                self._admit(s, res, partial=batch_res.partial)
+        paid: set[tuple[int, int]] = set()
+        for q in queries:
+            res = hits.get(id(q))
+            if res is not None:
+                self.stats["cache_hits"] += 1
+            else:
+                res = solved[(q.source, q.target)]
+                # duplicate pairs in one wave: only the first query pays
+                # for the solve, the rest are hits (same definition as
+                # the full path's `paid` accounting)
+                if (q.source, q.target) in paid:
+                    self.stats["cache_hits"] += 1
+                else:
+                    paid.add((q.source, q.target))
+            q.distance = float(np.asarray(res.dist[q.target]))
+            q.path = (res.path_to(q.target)
+                      if np.isfinite(q.distance) else None)
             q.done = True
         return queries
 

@@ -21,6 +21,12 @@ Dynamic graphs (weight streams) go through the dynamic subsystem:
     dyn.update(delta)                            # warm incremental re-solve
     dyn.resolve([0, 7])                          # post-update distances
 
+Goal-directed point-to-point queries (landmark/ALT seeding + early exit):
+
+    index = sssp.LandmarkIndex(graph, k=8)       # d(L,·) and d(·,L) tables
+    res = solver.solve(s, target=t, C0=index.seed(s))   # early-exits
+    res.dist[t]; res.path_to(t)                  # exact on the partial result
+
 The legacy entry points ``run_sssp`` / ``run_sssp_ell`` /
 ``run_sssp_distributed`` remain importable here as deprecation shims.
 """
@@ -30,6 +36,8 @@ from repro.core.sssp.backends import Primitives  # noqa: F401
 from repro.core.sssp.dynamic import (  # noqa: F401
     DynamicSolver, GraphDelta, make_delta, make_delta_from_endpoints,
     random_delta)
+from repro.core.sssp.landmarks import (  # noqa: F401
+    LandmarkIndex, seed_lower_bounds, select_landmarks)
 from repro.core.sssp.engine import (  # noqa: F401
     SP1_RULES, SP2_RULES, SP3_RULES, SP3_CONFIG, SP4_CONFIG, SSSPConfig,
     SSSPResult, run_sssp, run_sssp_ell, run_sssp_traced)

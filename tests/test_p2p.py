@@ -1,0 +1,419 @@
+"""Goal-directed (point-to-point) solves: landmark seeding, early exit,
+partial-result caching, and the PR's bugfix-sweep regressions."""
+import jax
+import numpy as np
+import pytest
+
+from conftest import assert_dist_equal
+from repro.core import generators as gen
+from repro.core.graph import HostGraph
+from repro.core.sssp.dynamic import DynamicSolver, make_delta
+from repro.core.sssp.landmarks import LandmarkIndex, seed_lower_bounds
+from repro.core.sssp.reference import dijkstra
+from repro.sssp import SSSPConfig, Solver
+from repro.runtime.sssp_service import Query, SSSPService
+
+FAMILIES = ["gnp", "dag", "unweighted", "grid", "power_law", "chain",
+            "geometric"]
+
+
+def _graph(family, n=160, seed=11):
+    nn, src, dst, w = gen.make(family, n, seed=seed)
+    return HostGraph(nn, src, dst, w)
+
+
+# ---------------------------------------------------------------------------
+# (a) targeted solves are exact on every family × backend
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("family", FAMILIES)
+@pytest.mark.parametrize("backend", ["segment", "ell"])
+def test_targeted_matches_full_and_dijkstra(family, backend):
+    hg = _graph(family)
+    solver = Solver(hg.to_device(), backend=backend)
+    s = 3 % hg.n
+    full = solver.solve(s)
+    ref = np.asarray(dijkstra(hg, source=s).dist)
+    for t in (0, 7, hg.n // 2, hg.n - 1):
+        part = solver.solve(s, target=t)
+        # the early-exited lane froze D[t] at fix time — bitwise equal to
+        # the full solve's final value, and exact vs the host reference
+        assert float(part.dist[t]) == float(full.dist[t])
+        assert part.partial and part.target == t
+        assert bool(part.fixed[t]) or np.isinf(ref[t])
+        assert_dist_equal([part.dist[t]], [ref[t]])
+        assert part.rounds <= full.rounds
+
+
+@pytest.mark.parametrize("family", FAMILIES)
+def test_seeded_targeted_matches_dijkstra(family):
+    hg = _graph(family)
+    index = LandmarkIndex(hg.to_device(), k=4, seed=7)
+    solver = Solver(hg.to_device())
+    s = 5 % hg.n
+    ref = np.asarray(dijkstra(hg, source=s).dist)
+    C0 = index.seed(s)
+    for t in (1, hg.n // 3, hg.n - 1):
+        res = solver.solve(s, target=t, C0=C0)
+        assert_dist_equal([res.dist[t]], [ref[t]])
+
+
+def test_targeted_batch_matches_full():
+    hg = _graph("grid", n=200)
+    solver = Solver(hg.to_device())
+    sources = [0, 3, 9, 17]
+    targets = [hg.n - 1, 60, 0, 120]
+    batch = solver.solve_batch(sources, targets=targets)
+    assert batch.partial and batch.targets is not None
+    for i, (s, t) in enumerate(zip(sources, targets)):
+        full = solver.solve(s)
+        assert float(batch.dist[i][t]) == float(full.dist[t])
+        r = batch[i]
+        assert r.target == t and r.partial
+
+
+def test_targeted_distributed_backend():
+    hg = _graph("gnp", n=120, seed=4)
+    solver = Solver(hg.to_device(), backend="distributed")
+    ref = np.asarray(dijkstra(hg, source=9).dist)
+    res = solver.solve(9, target=50)
+    assert_dist_equal([res.dist[50]], [ref[50]])
+    batch = solver.solve_batch([9, 0], targets=[50, 100])
+    assert_dist_equal([batch.dist[0][50]], [ref[50]])
+
+
+# ---------------------------------------------------------------------------
+# (b) landmark bounds are valid lower bounds, tight at landmarks
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("family", FAMILIES)
+def test_landmark_seed_is_valid_lower_bound(family):
+    hg = _graph(family, n=120)
+    index = LandmarkIndex(hg.to_device(), k=4, seed=3)
+    for s in (0, 11 % hg.n, 57 % hg.n):
+        C0 = np.asarray(index.seed(s), np.float64)
+        d = np.asarray(dijkstra(hg, source=s).dist, np.float64)
+        finite = np.isfinite(d)
+        assert (C0[finite] <= d[finite] + 1e-3).all(), family
+        # +inf seeds must only assert genuine unreachability
+        assert np.isinf(d[np.isinf(C0)]).all(), family
+        # equality at the landmarks themselves: the d(s,L) − d(L,L) term
+        for L in index.landmarks:
+            if np.isfinite(d[L]):
+                np.testing.assert_allclose(C0[L], d[L], rtol=1e-4,
+                                           atol=1e-3)
+            else:
+                assert np.isinf(C0[L]) or C0[L] <= d[L]
+
+
+def test_seed_lower_bounds_inf_semantics():
+    # two-component graph: landmark in component A never reaches B and
+    # vice versa; inf-inf rows must drop out instead of poisoning C0
+    src = np.array([0, 1, 3, 4])
+    dst = np.array([1, 2, 4, 5])
+    w = np.ones(4, np.float32)
+    hg = HostGraph(6, src, dst, w)
+    g = hg.to_device()
+    index = LandmarkIndex(g, k=2, seed=0)
+    for s in range(6):
+        C0 = np.asarray(index.seed(s), np.float64)
+        d = np.asarray(dijkstra(hg, source=s).dist, np.float64)
+        finite = np.isfinite(d)
+        assert not np.isnan(C0).any()
+        assert (C0[finite] <= d[finite] + 1e-5).all()
+
+
+# ---------------------------------------------------------------------------
+# (c) paths on partial (early-exited) results
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("family", ["gnp", "grid", "chain"])
+def test_path_on_partial_result(family):
+    hg = _graph(family, n=200)
+    index = LandmarkIndex(hg.to_device(), k=4, seed=1)
+    solver = Solver(hg.to_device())
+    wmap = {(int(a), int(b)): float(ww)
+            for a, b, ww in zip(hg.src, hg.dst, hg.w)}
+    s = 3
+    ref = np.asarray(dijkstra(hg, source=s).dist, np.float64)
+    for t in (0, 40, 111, hg.n - 1):
+        res = solver.solve(s, target=t, C0=index.seed(s))
+        if np.isinf(ref[t]):
+            assert res.path_to(t) is None or not np.isfinite(
+                float(res.dist[t]))
+            continue
+        path = res.path_to(t)
+        assert path is not None and path[0] == s and path[-1] == t
+        cost = sum(wmap[(a, b)] for a, b in zip(path, path[1:]))
+        np.testing.assert_allclose(cost, ref[t], rtol=1e-5, atol=1e-3)
+
+
+# ---------------------------------------------------------------------------
+# no-retrace discipline: (source, target, C0) are all traced operands
+# ---------------------------------------------------------------------------
+
+def test_no_retrace_across_targets_and_seeds():
+    hg = _graph("gnp", n=120, seed=2)
+    index = LandmarkIndex(hg.to_device(), k=3, seed=0)
+    solver = Solver(hg.to_device())
+    solver.solve(0)
+    solver.solve(1, target=5)
+    solver.solve(2, target=9, C0=index.seed(2))
+    assert solver.trace_count == 1, \
+        "targeted/seeded/plain solves must share one compiled program"
+    before = solver.trace_count
+    solver.solve_batch([0, 1, 2, 3])
+    solver.solve_batch([4, 5, 6, 7], targets=[1, 2, 3, 4])
+    solver.solve_batch([0, 2, 4, 6], targets=[9, 9, 9, 9],
+                       C0=index.seed_batch([0, 2, 4, 6]))
+    assert solver.trace_count == before + 1, \
+        "one compile per batch shape, targeted or not"
+
+
+def test_early_exit_ablatable_via_config():
+    hg = _graph("grid", n=200)
+    cfg = SSSPConfig(early_exit=False)
+    solver = Solver(hg.to_device(), cfg)
+    full = solver.solve(0)
+    res = solver.solve(0, target=5)
+    assert not res.partial          # ran to fixpoint despite the target
+    assert res.rounds == full.rounds
+    assert_dist_equal(res.dist, full.dist)
+
+
+# ---------------------------------------------------------------------------
+# bugfix sweep: baseline retraces, backend routing, relax_ell hot loop
+# ---------------------------------------------------------------------------
+
+def test_delta_stepping_no_retrace_across_sources():
+    from repro.core.sssp import delta_stepping as ds
+    hg = _graph("gnp", n=100, seed=5)
+    g = hg.to_device()
+    ds.run_delta_stepping(g, 0)
+    base = ds.trace_count()
+    for s in (1, 2, 3, 4):
+        res = ds.run_delta_stepping(g, s)
+        assert_dist_equal(res.dist, dijkstra(hg, source=s).dist)
+    assert ds.trace_count() == base, \
+        "delta-stepping must not retrace per source"
+
+
+def test_bellman_ford_no_retrace_across_sources():
+    from repro.core.sssp import bellman_ford as bf
+    hg = _graph("gnp", n=100, seed=5)
+    g = hg.to_device()
+    bf.run_bellman_ford(g, 0)
+    base = bf.trace_count()
+    for s in (1, 2, 3, 4):
+        res = bf.run_bellman_ford(g, s)
+        assert_dist_equal(res.dist, dijkstra(hg, source=s).dist)
+    assert bf.trace_count() == base, \
+        "Bellman-Ford must not retrace per source"
+
+
+def test_ell_backend_never_routes_through_pallas(monkeypatch):
+    import repro.kernels.ops as ops
+
+    def boom(*a, **k):
+        raise AssertionError("Pallas kernel entered for backend='ell'")
+
+    monkeypatch.setattr(ops, "_relax_pallas", boom)
+    monkeypatch.setattr(ops, "_masked_min_pallas", boom)
+    hg = _graph("gnp", n=80, seed=6)
+    # misconfigured: use_pallas=True must be normalized off for "ell"
+    solver = Solver(hg.to_device(), SSSPConfig(use_pallas=True),
+                    backend="ell")
+    assert solver.cfg.use_pallas is False
+    assert_dist_equal(solver.solve(0).dist, dijkstra(hg).dist)
+
+
+def test_pallas_backend_forces_flag_on():
+    hg = _graph("gnp", n=80, seed=6)
+    solver = Solver(hg.to_device(), SSSPConfig(use_pallas=False),
+                    backend="pallas")
+    assert solver.cfg.use_pallas is True
+
+
+def test_relax_ell_hot_loop_no_concat_bitwise():
+    import jax.numpy as jnp
+    from repro.kernels import ops
+
+    hg = _graph("power_law", n=90, seed=8)
+    ell = hg.to_ell()
+    rng = np.random.default_rng(0)
+    D = jnp.asarray(np.where(rng.random(hg.n) < 0.3, np.inf,
+                             rng.random(hg.n) * 10).astype(np.float32))
+    mask = jnp.asarray(rng.random(hg.n) < 0.6)
+
+    def sentinel_reference(D, mask):   # the old concatenate formulation
+        D_ext = jnp.concatenate([D, jnp.array([jnp.inf], D.dtype)])
+        m_ext = jnp.concatenate([mask, jnp.array([False])])
+        cand = jnp.where(m_ext[ell.in_src], D_ext[ell.in_src] + ell.in_w,
+                         jnp.inf)
+        return jnp.min(cand, axis=-1)[: ell.n]
+
+    got = np.asarray(ops.relax_ell(D, ell, mask, use_pallas=False))
+    want = np.asarray(sentinel_reference(D, mask))
+    assert np.array_equal(got, want), "clamp+mask must be bitwise identical"
+    # and the hot path must be pure gathers — no concatenate ops at all
+    jaxpr = jax.make_jaxpr(
+        lambda d, m: ops.relax_ell(d, ell, m, use_pallas=False))(D, mask)
+    assert "concatenate" not in str(jaxpr)
+
+
+# ---------------------------------------------------------------------------
+# service: targeted fast path, partial stamping, delta interaction
+# ---------------------------------------------------------------------------
+
+def test_service_p2p_answers_match_dijkstra():
+    hg = _graph("grid", n=200, seed=9)
+    service = SSSPService(hg.to_device(), batch=4, landmarks=4)
+    assert service.p2p
+    rng = np.random.default_rng(0)
+    queries = [Query(source=int(rng.integers(hg.n)),
+                     target=int(rng.integers(hg.n))) for _ in range(10)]
+    service.serve(queries)
+    for q in queries:
+        exp = dijkstra(hg, source=q.source).dist[q.target]
+        got = q.distance
+        if np.isinf(exp):
+            assert np.isinf(got)
+        else:
+            np.testing.assert_allclose(got, exp, rtol=1e-5, atol=1e-3)
+            if q.path is not None:
+                assert q.path[0] == q.source and q.path[-1] == q.target
+    assert service.stats["p2p_solves"] > 0
+
+
+def test_service_partial_entries_never_poison_full_lookups():
+    hg = _graph("gnp", n=150, seed=12)
+    service = SSSPService(hg.to_device(), batch=2, landmarks=3)
+    service.serve([Query(source=7, target=3)])     # partial entry for 7
+    entry = service._cache.get(7)
+    assert entry is not None and entry[2] is True  # stamped partial
+    # full-vector paths must re-solve, not reuse the partial entry
+    assert_dist_equal(service.distances(7), dijkstra(hg, source=7).dist)
+    q = Query(source=7, target=None)
+    service.serve([q])
+    assert q.dist is not None
+    assert_dist_equal(q.dist, dijkstra(hg, source=7).dist)
+    # and the full entry must not be downgraded by a later partial admit
+    service.serve([Query(source=7, target=9)])
+    assert service._cache[7][2] is False
+
+
+def test_service_partial_cache_hits_on_fixed_targets():
+    hg = _graph("chain", n=150, seed=2)
+    service = SSSPService(hg.to_device(), batch=1, landmarks=3)
+    service.serve([Query(source=0, target=140)])
+    solves = service.stats["p2p_solves"]
+    # a vertex fixed by the first (far-target) solve answers from cache
+    q = Query(source=0, target=5)
+    service.serve([q])
+    exp = dijkstra(hg, source=0).dist[5]
+    np.testing.assert_allclose(q.distance, exp, rtol=1e-5, atol=1e-3)
+    if bool(np.asarray(service._cache[0][1].fixed[5])):
+        assert service.stats["p2p_solves"] == solves
+        assert service.stats["cache_hits"] >= 1
+
+
+def test_service_p2p_exact_across_deltas():
+    from repro.core.sssp.dynamic import random_delta
+    hg = _graph("grid", n=200, seed=3)
+    service = SSSPService(hg.to_device(), batch=4, landmarks=4)
+    service.serve([Query(source=3, target=150), Query(source=9, target=0)])
+    for seed in (1, 2):
+        delta = random_delta(service.solver.graph, 25, seed=seed)
+        service.apply_delta(delta)
+        assert service.landmarks.seed_ok and not service.landmarks.stale
+        hg_now = service.solver.graph.to_host()
+        queries = [Query(source=3, target=150), Query(source=40, target=7)]
+        service.serve(queries)
+        for q in queries:
+            exp = dijkstra(hg_now, source=q.source).dist[q.target]
+            if np.isinf(exp):
+                assert np.isinf(q.distance)
+            else:
+                np.testing.assert_allclose(q.distance, exp, rtol=1e-5,
+                                           atol=1e-3)
+
+
+def test_lazy_landmarks_pure_increase_keeps_seeding_decrease_drops_it():
+    hg = _graph("gnp", n=120, seed=4)
+    service = SSSPService(hg.to_device(), batch=2, landmarks=3,
+                          refresh_landmarks=False)
+    g = service.solver.graph
+    old_w = np.asarray(g.w[: g.e])
+    inc = make_delta(g, [0, 1, 2], old_w[[0, 1, 2]] * 2.0)
+    service.apply_delta(inc)
+    index = service.landmarks
+    assert index.stale and index.seed_ok        # stale but still valid
+    # stale seeds must still be VALID lower bounds on the new graph
+    hg_now = service.solver.graph.to_host()
+    C0 = np.asarray(index.seed(5), np.float64)
+    d = np.asarray(dijkstra(hg_now, source=5).dist, np.float64)
+    finite = np.isfinite(d)
+    assert (C0[finite] <= d[finite] + 1e-3).all()
+    # ... and targeted queries stay exact
+    q = Query(source=5, target=60)
+    service.serve([q])
+    exp = d[60]
+    if np.isinf(exp):
+        assert np.isinf(q.distance)
+    else:
+        np.testing.assert_allclose(q.distance, exp, rtol=1e-5, atol=1e-3)
+    # one decrease: seeding must drop until refresh
+    dec = make_delta(service.solver.graph, [7],
+                     [float(np.asarray(service.solver.graph.w[7]) * 0.5)])
+    service.apply_delta(dec)
+    assert not index.seed_ok and index.seed(5) is None
+    q2 = Query(source=5, target=60)            # unseeded but still exact
+    service.serve([q2])
+    hg_now = service.solver.graph.to_host()
+    exp = dijkstra(hg_now, source=5).dist[60]
+    if np.isinf(exp):
+        assert np.isinf(q2.distance)
+    else:
+        np.testing.assert_allclose(q2.distance, exp, rtol=1e-5, atol=1e-3)
+    index.refresh()
+    assert index.seed_ok and not index.stale
+
+
+def test_dynamic_solver_does_not_track_partial_results():
+    hg = _graph("gnp", n=100, seed=1)
+    dyn = DynamicSolver(hg.to_device())
+    dyn.solve(0, target=50)
+    assert 0 not in dyn._states    # partial: no warm-start state kept
+    dyn.solve(0)
+    assert 0 in dyn._states
+
+
+def test_reverse_graph_and_delta_remap():
+    hg = _graph("gnp", n=80, seed=9)
+    g = hg.to_device()
+    rg = g.reverse()
+    # reverse twice = original edge multiset
+    a = sorted(zip(np.asarray(g.src[:g.e]).tolist(),
+                   np.asarray(g.dst[:g.e]).tolist(),
+                   np.asarray(g.w[:g.e]).tolist()))
+    b = sorted(zip(np.asarray(rg.dst[:rg.e]).tolist(),
+                   np.asarray(rg.src[:rg.e]).tolist(),
+                   np.asarray(rg.w[:rg.e]).tolist()))
+    assert a == b
+    # d(v, L) on g == d(L, v) on reverse(g)
+    ref = dijkstra(hg.reverse(), source=13).dist
+    got = Solver(rg).solve(13).dist
+    assert_dist_equal(got, ref)
+    # remapped delta touches the same (u, v, w) triple
+    index = LandmarkIndex(g, k=2, seed=0)
+    delta = make_delta(g, [4, 10], [9.0, 8.0])
+    rdelta = index.reverse_delta(delta)
+    g2 = g.apply_delta(delta)
+    rg2 = index._rev.graph.apply_delta(rdelta)
+    a = sorted(zip(np.asarray(g2.src[:g2.e]).tolist(),
+                   np.asarray(g2.dst[:g2.e]).tolist(),
+                   np.asarray(g2.w[:g2.e]).tolist()))
+    b = sorted(zip(np.asarray(rg2.dst[:rg2.e]).tolist(),
+                   np.asarray(rg2.src[:rg2.e]).tolist(),
+                   np.asarray(rg2.w[:rg2.e]).tolist()))
+    assert a == b
