@@ -8,6 +8,7 @@
   bench_batch       — batched multi-source Solver + serving queries/sec
   bench_dynamic     — warm incremental re-solve vs cold after weight deltas
   bench_p2p         — goal-directed point-to-point vs full solves (ALT)
+  bench_frontier    — sparse-frontier rounds vs dense (edges relaxed)
   bench_kernels     — kernel microbench (jnp path)
 
 ``python -m benchmarks.run [--quick]`` prints CSV blocks per bench.
@@ -40,9 +41,10 @@ def main() -> None:
     ap.add_argument("--only", default=None)
     args = ap.parse_args()
 
-    from benchmarks import (bench_batch, bench_dynamic, bench_heap_ops,
-                            bench_kernels, bench_optimality, bench_p2p,
-                            bench_rounds, bench_throughput)
+    from benchmarks import (bench_batch, bench_dynamic, bench_frontier,
+                            bench_heap_ops, bench_kernels,
+                            bench_optimality, bench_p2p, bench_rounds,
+                            bench_throughput)
 
     n = 600 if args.quick else 2000
     sizes = (1000, 4000) if args.quick else (2000, 8000, 32000)
@@ -62,6 +64,8 @@ def main() -> None:
         "p2p": lambda: bench_p2p.run(
             n=400 if args.quick else 2000, pairs=4 if args.quick else 8,
             reps=1 if args.quick else 3),
+        "frontier": lambda: bench_frontier.run(
+            n=400 if args.quick else 2000, reps=1 if args.quick else 3),
         "kernels": bench_kernels.run,
     }
     t_all = time.time()

@@ -146,6 +146,20 @@ class Graph:
                            np.asarray(self.src[:e]),
                            np.asarray(self.w[:e]), **kw)
 
+    def csr(self) -> "CsrGraph":
+        """Src-sorted (CSR) out-edge view for the frontier backend.
+
+        The primary layout is dst-sorted (CSC) because every dense round
+        reduces *at destinations*; the sparse-frontier round instead
+        walks the *out*-edges of a handful of vertices, which needs
+        contiguous per-source runs.  Preprocessing-time only — builds
+        host-side; weight updates ride :meth:`CsrGraph.apply_delta`
+        through the same :class:`~repro.core.sssp.dynamic.GraphDelta`
+        (``csr_pos`` is the dst-sorted→src-sorted edge permutation,
+        precomputed by ``make_delta``).
+        """
+        return build_csr(self)
+
 
 def _validate_delta_weights(delta) -> None:
     """Loudly reject non-positive/NaN update weights (post-construction
@@ -198,6 +212,66 @@ def build_graph(n: int, src, dst, w, *, edge_pad_multiple: int = 128) -> Graph:
         in_deg=jnp.asarray(in_deg), out_deg=jnp.asarray(out_deg),
         in_weight=jnp.asarray(in_weight), out_weight=jnp.asarray(out_weight),
     )
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class CsrGraph:
+    """Src-sorted out-edge (CSR) view for the sparse-frontier backend.
+
+    ``indptr[u] : indptr[u+1]`` is vertex u's contiguous run of
+    out-edges in the src-sorted ``dst``/``w`` arrays (real edges only —
+    offsets live in ``[0, e]``; the tail up to ``e_pad`` is padding with
+    ``dst = n``, ``w = +inf``).  ``max_out_deg`` bounds the per-vertex
+    gather width, so a compacted frontier of ``cap`` vertices touches at
+    most ``cap * max_out_deg`` edge slots per round — wavefront-
+    proportional, never graph-proportional.
+
+    Registered as a pytree (sizes static) so it rides through jit /
+    ``lax.while_loop`` as a traced operand like ``Graph``/``EllGraph``.
+    """
+
+    n: int = dataclasses.field(metadata=dict(static=True))
+    e: int = dataclasses.field(metadata=dict(static=True))
+    e_pad: int = dataclasses.field(metadata=dict(static=True))
+    max_out_deg: int = dataclasses.field(metadata=dict(static=True))
+    indptr: jax.Array  # int32[n + 1] out-edge run offsets (CSR)
+    dst: jax.Array     # int32[e_pad] src-sorted edge heads (padding: n)
+    w: jax.Array       # float32[e_pad] src-sorted weights (padding: inf)
+
+    def apply_delta(self, delta) -> "CsrGraph":
+        """The same weight updates ``Graph.apply_delta`` applies, landed
+        at the src-sorted positions (``delta.csr_pos``, precomputed by
+        ``make_delta``; padding rows are out-of-bounds and scatter-
+        dropped).  Keeping the CSR view coherent with the CSC list is
+        what lets the frontier backend re-solve incrementally."""
+        _validate_delta_weights(delta)
+        if getattr(delta, "csr_pos", None) is None:
+            raise ValueError(
+                "delta carries no csr_pos permutation; build it via "
+                "make_delta/make_delta_from_endpoints against the "
+                "current graph to update a CsrGraph")
+        w = self.w.at[delta.csr_pos].set(delta.new_w, mode="drop")
+        return dataclasses.replace(self, w=w)
+
+
+def build_csr(g: Graph) -> CsrGraph:
+    """Host-side CSR (out-edge) view of a device Graph."""
+    e = g.e
+    src = np.asarray(g.src[:e])
+    dst = np.asarray(g.dst[:e])
+    w = np.asarray(g.w[:e])
+    order = np.argsort(src, kind="stable")  # csr_perm: dst-sorted -> CSR
+    out_deg = np.bincount(src, minlength=g.n).astype(np.int64)
+    indptr = np.zeros(g.n + 1, np.int32)
+    np.cumsum(out_deg, out=indptr[1:])
+    return CsrGraph(
+        n=g.n, e=e, e_pad=g.e_pad,
+        max_out_deg=max(int(out_deg.max()) if e else 0, 1),
+        indptr=jnp.asarray(indptr),
+        dst=jnp.asarray(_pad_to(dst[order].astype(np.int32), g.e_pad, g.n)),
+        w=jnp.asarray(_pad_to(w[order].astype(np.float32), g.e_pad,
+                              np.inf)))
 
 
 @jax.tree_util.register_dataclass

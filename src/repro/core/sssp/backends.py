@@ -25,10 +25,19 @@ same round, not copies of it.
         launches).  ``None`` means "run them separately".
     masked_min(x, mask)     -> float32 scalar
         global min over masked vertices (the heap minimum of SP1–SP3).
+    relax_frontier(x, f_idx, src_mask) -> float32[n]
+        optional sparse hook (the frontier backend): the same reduction
+        as ``relax``, but only over out-edges of the vertices in the
+        compacted frontier buffer ``f_idx`` (int32[frontier_cap],
+        padding slots = n).  Setting it switches the engine's step-1
+        D-relaxation to wavefront-proportional rounds; ``frontier_cap``
+        must then be > 0 (the buffer's static size; the engine falls
+        back to dense ``relax`` for any round whose true frontier
+        outgrew it).
 
 All primitives take and return *vertex* arrays; edge-layout details
-(gathers, segment ids, ELL padding, shard partitions) live entirely
-behind this line.
+(gathers, segment ids, ELL padding, CSR offsets, shard partitions) live
+entirely behind this line.
 """
 from __future__ import annotations
 
@@ -38,7 +47,7 @@ from typing import Callable
 import jax
 import jax.numpy as jnp
 
-from repro.core.graph import EllGraph, Graph, INF
+from repro.core.graph import CsrGraph, EllGraph, Graph, INF
 
 
 @dataclasses.dataclass(frozen=True)
@@ -49,6 +58,8 @@ class Primitives:
     in_weight_nf: Callable[[jax.Array], jax.Array]
     masked_min: Callable[[jax.Array, jax.Array], jax.Array]
     relax2: Callable | None = None  # optional fused (relax, in_weight_nf)
+    relax_frontier: Callable | None = None  # optional sparse step-1 relax
+    frontier_cap: int = 0           # static frontier-buffer size (0 = dense)
 
 
 def _masked_min_local(x: jax.Array, mask: jax.Array) -> jax.Array:
@@ -94,6 +105,33 @@ def ell_prims(g: Graph, ell: EllGraph, use_pallas: bool) -> Primitives:
 
     return Primitives(relax=relax, in_weight_nf=in_weight_nf,
                       masked_min=masked_min)
+
+
+def frontier_prims(g: Graph, csr: CsrGraph, cap: int,
+                   use_pallas: bool = False) -> Primitives:
+    """Sparse-frontier backend: compacted-buffer relax over the CSR view.
+
+    Step-1 D-relaxation gathers only the out-edges of the (at most
+    ``cap``) buffered vertices — ``cap * csr.max_out_deg`` edge slots
+    instead of ``e_pad`` — through the Pallas scatter-min kernel
+    (kernels/frontier_relax) when ``use_pallas``, the jnp oracle
+    otherwise.  The dense primitives stay segment ops: they serve the
+    full-vertex-set reductions (inWeight_nf, C-propagation) and the
+    overflow-fallback rounds, which keeps every round bitwise-identical
+    to the segment backend.
+    """
+    from repro.kernels import ops
+
+    base = segment_prims(g)
+
+    def relax_frontier(x, f_idx, src_mask):
+        return ops.frontier_relax(x, csr, f_idx, src_mask,
+                                  use_pallas=use_pallas)
+
+    return Primitives(relax=base.relax, in_weight_nf=base.in_weight_nf,
+                      masked_min=_masked_min_local,
+                      relax_frontier=relax_frontier,
+                      frontier_cap=int(cap))
 
 
 def distributed_prims(lg: Graph, axes: tuple[str, ...]) -> Primitives:

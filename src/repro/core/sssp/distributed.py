@@ -120,9 +120,9 @@ def make_sharded_warm(g: Graph, cfg: SSSPConfig = SP4_CONFIG,
                       axes: tuple[str, ...] = ("data",), on_trace=None):
     """Edge-sharded warm update+re-solve program (sssp/dynamic.py).
 
-    Returns a callable ``(g_old, ell_unused, delta, prev_D[B, n],
-    prev_fixed[B, n]) -> (g_new, None, states, sweeps, tainted)``
-    matching ``DynamicSolver._warm_program``.  The delta application and
+    Returns a callable ``(g_old, ell_unused, csr_unused, delta,
+    prev_D[B, n], prev_fixed[B, n]) -> (g_new, None, None, states,
+    sweeps, tainted)`` matching ``DynamicSolver._warm_program``.  The delta application and
     the per-source taint *seeds* (which need global-index gathers into
     the old edge arrays) run at the jit level outside ``shard_map``;
     taint *propagation* and the warm rounds run inside it, against the
@@ -158,14 +158,14 @@ def make_sharded_warm(g: Graph, cfg: SSSPConfig = SP4_CONFIG,
         out_specs=vert_spec, check_rep=False)
 
     @jax.jit
-    def warm(g_old: Graph, _ell, delta, prev_D, prev_F):
+    def warm(g_old: Graph, _ell, _csr, delta, prev_D, prev_F):
         g_new = g_old.apply_delta(delta)
         seeds, pure = jax.vmap(
             lambda D0: delta_taint_seeds(g_old, delta, D0))(prev_D)
         states, sweeps, taint = sharded(
             g_new.src, g_new.dst, g_new.w, g_new.out_weight,
             seeds, pure, prev_D, prev_F)
-        return g_new, None, states, sweeps, jnp.sum(taint, axis=1)
+        return g_new, None, None, states, sweeps, jnp.sum(taint, axis=1)
 
     return warm
 

@@ -44,6 +44,7 @@ regime of Yu et al. (arXiv:2506.19349).
 from __future__ import annotations
 
 import dataclasses
+import weakref
 from collections import OrderedDict
 
 import jax
@@ -59,6 +60,44 @@ from repro.core.sssp.solver import Solver, SSSPBatchResult, _next_pow2
 # padding sentinel for the ELL cell coordinates: out of bounds for any
 # layout, so padded delta rows are scatter-dropped by every consumer.
 _ELL_PAD = np.int32(1 << 30)
+
+# dst-sorted -> CSR inverse permutations, keyed by id(g.src).  The
+# permutation depends only on topology, which apply_delta never changes
+# — and apply_delta also keeps the src/dst array OBJECTS (it replaces
+# only the weight-bearing fields), so every graph version of a delta
+# stream shares one cache entry.  The weakref finalizer evicts the
+# entry when the edge array dies, which also makes id reuse harmless.
+_CSR_INV_CACHE: dict[int, np.ndarray] = {}
+
+
+def _csr_inverse_perm(g: Graph) -> np.ndarray:
+    key = id(g.src)
+    inv = _CSR_INV_CACHE.get(key)
+    if inv is None:
+        order = np.argsort(np.asarray(g.src[: g.e]), kind="stable")
+        inv = np.empty(g.e, np.int64)
+        inv[order] = np.arange(g.e)
+        _register_csr_perm(g.src, inv)
+    return inv
+
+
+def _register_csr_perm(src_arr, inv: np.ndarray) -> None:
+    key = id(src_arr)
+    if key not in _CSR_INV_CACHE:
+        _CSR_INV_CACHE[key] = inv
+        weakref.finalize(src_arr, _CSR_INV_CACHE.pop, key, None)
+
+
+def _carry_csr_perm(old_src, new_src) -> None:
+    """Propagate a cached permutation across a graph-version bump.
+
+    The compiled update program returns a fresh pytree, so ``new_src``
+    is a different array OBJECT with identical contents (apply_delta
+    never touches topology) — the old version's permutation is still
+    exact for the new one."""
+    inv = _CSR_INV_CACHE.get(id(old_src))
+    if inv is not None and old_src is not new_src:
+        _register_csr_perm(new_src, inv)
 
 
 @jax.tree_util.register_dataclass
@@ -89,6 +128,10 @@ class GraphDelta:
     new_w: jax.Array     # float32[k_pad]
     ell_row: jax.Array   # int32[k_pad]
     ell_col: jax.Array   # int32[k_pad]
+    csr_pos: jax.Array | None = None  # int32[k_pad]: the same edges'
+    #   positions in the src-sorted CSR view (padding >= e_pad, scatter-
+    #   dropped).  ``make_delta`` always fills it; ``None`` (hand-built
+    #   deltas) only forfeits ``CsrGraph.apply_delta``.
 
     @property
     def k_pad(self) -> int:
@@ -130,6 +173,12 @@ def make_delta(g: Graph, edge_idx, new_w, *, min_pad: int = 8) -> GraphDelta:
     dst = dst_sorted[edge_idx]
     col = edge_idx - np.searchsorted(dst_sorted, dst, side="left")
 
+    # CSR-view position per edge: dst-sorted edge i sits at row
+    # csr_perm⁻¹[i] of the src-sorted list (build_csr sorts stably by
+    # src over the same dst-sorted order).  Topology-constant — cached
+    # per edge array so a streaming delta sequence computes it once.
+    csr_pos = _csr_inverse_perm(g)[edge_idx]
+
     k = int(edge_idx.size)
     k_pad = max(min_pad, _next_pow2(k))
     pad = k_pad - k
@@ -144,6 +193,7 @@ def make_delta(g: Graph, edge_idx, new_w, *, min_pad: int = 8) -> GraphDelta:
         new_w=_p(new_w, 1.0, np.float32),   # positive: passes validation
         ell_row=_p(dst, _ELL_PAD, np.int32),
         ell_col=_p(col, _ELL_PAD, np.int32),
+        csr_pos=_p(csr_pos, g.e_pad, np.int32),
     )
 
 
@@ -226,17 +276,25 @@ class DynamicSolver(Solver):
     def _count_warm_trace(self):
         self.warm_trace_count += 1  # python side effect: runs per TRACE
 
-    def _warm_program(self, g_old: Graph, ell_old, delta: GraphDelta,
-                      prev_D, prev_fixed):
-        """(g_old, delta, [B,n] prev states) -> (g_new, ell_new, states).
+    def _warm_program(self, g_old: Graph, ell_old, csr_old,
+                      delta: GraphDelta, prev_D, prev_fixed):
+        """(g_old, delta, [B,n] prev states) -> (g_new, layouts, states).
 
         Taint seeds are per-source (tightness is a property of each
-        source's distance field); the graph mutation is shared.
+        source's distance field); the graph mutation is shared.  The
+        CSR view (frontier backend) is delta-updated here for coherence
+        with later unbatched solves, but the warm rounds themselves run
+        the DENSE body (``prims`` built without csr): the refresh batch
+        is vmapped, where the sparse path's overflow cond linearizes to
+        select and the batched gather/scatter relax measures slower
+        than the segment round (see ``Solver.solve_batch``).  Warm
+        results stay bitwise-identical either way.
         """
         self._count_warm_trace()
         g_new = g_old.apply_delta(delta)
         ell_new = None if ell_old is None else ell_old.apply_delta(delta)
-        prims = self._make_prims(g_new, ell_new)
+        csr_new = None if csr_old is None else csr_old.apply_delta(delta)
+        prims = self._make_prims(g_new, ell_new, None)
 
         def one(D0, f0):
             seeds, pure = delta_taint_seeds(g_old, delta, D0)
@@ -244,7 +302,8 @@ class DynamicSolver(Solver):
                                prims=prims)
 
         states, sweeps, taint = jax.vmap(one)(prev_D, prev_fixed)
-        return g_new, ell_new, states, sweeps, jnp.sum(taint, axis=1)
+        return g_new, ell_new, csr_new, states, sweeps, jnp.sum(taint,
+                                                                axis=1)
 
     # ------------------------------------------------------------------
     def _track(self, source: int, *, D, C, fixed, rounds, fixed_by) -> None:
@@ -298,6 +357,7 @@ class DynamicSolver(Solver):
                             f"got {type(delta)!r}")
         didx = np.asarray(delta.edge_idx)[: delta.k]
         dw = np.asarray(delta.new_w)[: delta.k]
+        old_src = self.graph.src   # carry the CSR perm across versions
         # async device gather of the k OLD weights (for the stats
         # counters); the blocking np.asarray happens only after the warm
         # program is dispatched, keeping the hot path sync-free.
@@ -320,9 +380,10 @@ class DynamicSolver(Solver):
             padded = warm_src + [warm_src[-1]] * (b_pad - b)
             prev_D = jnp.stack([self._states[s]["D"] for s in padded])
             prev_F = jnp.stack([self._states[s]["fixed"] for s in padded])
-            g_new, ell_new, states, sweeps, tainted = self._jit_warm(
-                self.graph, self.ell, delta, prev_D, prev_F)
-            self.graph, self.ell = g_new, ell_new
+            (g_new, ell_new, csr_new, states, sweeps,
+             tainted) = self._jit_warm(
+                self.graph, self.ell, self.csr, delta, prev_D, prev_F)
+            self.graph, self.ell, self.csr = g_new, ell_new, csr_new
             self.version += 1
             fb = np.asarray(states.fixed_by)
             rounds = np.asarray(states.round)
@@ -339,7 +400,10 @@ class DynamicSolver(Solver):
             self.graph = self.graph.apply_delta(delta)
             if self.ell is not None:
                 self.ell = self.ell.apply_delta(delta)
+            if self.csr is not None:
+                self.csr = self.csr.apply_delta(delta)
             self.version += 1
+        _carry_csr_perm(old_src, self.graph.src)
         if cold_src:
             self.solve_batch(cold_src)
         old_w = np.asarray(old_w_dev)   # blocks AFTER the update dispatched

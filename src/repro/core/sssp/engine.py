@@ -91,6 +91,19 @@ class SSSPState:
     #   and termination must wait for fixed ∧ ¬explored to drain.
     round: jax.Array    # int32 scalar
     fixed_by: jax.Array  # int32[5] cumulative per-rule fix counts (ablation)
+    # --- sparse-frontier extension (None on dense backends) ---
+    f_idx: jax.Array | None = None  # int32[cap] compacted frontier buffer:
+    #   vertex ids whose out-edge offers are NEW this round (padding: n).
+    f_cnt: jax.Array | None = None  # int32 scalar true frontier size;
+    #   f_cnt > cap flags OVERFLOW — the buffer holds only a prefix, so
+    #   the next round falls back to the dense relax (bitwise-safe) and
+    #   the frontier re-compacts from that round's changes.
+    edges: jax.Array | None = None  # int32 scalar cumulative edges the
+    #   D-relaxation OPERATED ON (live relax ops: out-degrees of masked
+    #   buffer slots on sparse rounds, e_pad on dense-fallback rounds).
+    #   The physical gather of a sparse round touches up to
+    #   cap * max_out_deg padded slots regardless of how many are live —
+    #   the bench reports that bound separately (slot_ratio).
 
 
 @dataclasses.dataclass
@@ -111,6 +124,9 @@ class SSSPResult:
     source: int | None = None
     graph: Graph | None = None
     target: int | None = None     # the goal of a targeted (p2p) solve
+    edges_relaxed: int | None = None  # frontier backend: edge slots the
+    #   D-relaxation gathered over the whole solve (None on dense
+    #   backends, whose relax always touches all e_pad slots per round).
     partial: bool = False         # early-exited: only FIXED vertices carry
     #   exact distances (dist[target] always does); unfixed entries are
     #   upper bounds.  ``path_to(target)`` remains exact on a partial
@@ -146,7 +162,30 @@ def _fixed_by_dict(fixed_by) -> dict[str, int]:
     return {r: int(c) for r, c in zip(_RULE_ORDER, fb)}
 
 
-def _init_state(g: Graph, source, C0=None) -> SSSPState:
+def _frontier_cap(prims) -> int:
+    return getattr(prims, "frontier_cap", 0) if prims is not None else 0
+
+
+def _compact_frontier(mask: jax.Array, cap: int, n: int):
+    """Compacted index buffer of the True positions of ``mask``.
+
+    ``cumsum``-compaction inside the round body: position of vertex v in
+    the buffer is the number of True entries before it.  Returns
+    ``(f_idx int32[cap], f_cnt int32)``; when the true count exceeds
+    ``cap`` the surplus scatters are dropped (the buffer holds a prefix)
+    and the caller must treat ``f_cnt > cap`` as overflow — the dense
+    round for that iteration keeps results bitwise-identical.
+    """
+    pos = jnp.cumsum(mask, dtype=jnp.int32) - 1
+    f_cnt = jnp.sum(mask, dtype=jnp.int32)
+    at = jnp.where(mask, pos, cap)  # cap (and beyond) -> dropped
+    f_idx = jnp.full((cap,), n, jnp.int32).at[at].set(
+        jnp.arange(n, dtype=jnp.int32), mode="drop")
+    return f_idx, f_cnt
+
+
+def _init_state(g: Graph, source, C0=None,
+                prims: "backends.Primitives | None" = None) -> SSSPState:
     """``source`` may be a python int or a traced int32 scalar — keeping it
     traced is what lets the Solver vmap over sources without retracing.
 
@@ -155,6 +194,11 @@ def _init_state(g: Graph, source, C0=None) -> SSSPState:
     contract: ``C0[v] <= d(source, v)`` for every v (``+inf`` is allowed
     and asserts unreachability).  Seeded bounds let the lb rule fix
     vertices rounds earlier; invalid seeds give wrong distances.
+
+    A frontier-capable ``prims`` additionally seeds the compacted
+    frontier buffer with the source (the only vertex whose offers are
+    new at round 1 — the label-setting round 1 relaxes nothing and masks
+    it out, bitwise-identical either way).
     """
     D = jnp.full((g.n,), INF, jnp.float32).at[source].set(0.0)
     if C0 is None:
@@ -162,8 +206,16 @@ def _init_state(g: Graph, source, C0=None) -> SSSPState:
     else:
         C = jnp.maximum(C0.astype(jnp.float32), 0.0)
     fixed = jnp.zeros((g.n,), bool)
+    cap = _frontier_cap(prims)
+    f_idx = f_cnt = edges = None
+    if cap:
+        f_idx = jnp.full((cap,), g.n, jnp.int32).at[0].set(
+            jnp.int32(source))
+        f_cnt = jnp.int32(1)
+        edges = jnp.int32(0)
     return SSSPState(D=D, C=C, fixed=fixed, explored=fixed,
-                     round=jnp.int32(0), fixed_by=jnp.zeros(5, jnp.int32))
+                     round=jnp.int32(0), fixed_by=jnp.zeros(5, jnp.int32),
+                     f_idx=f_idx, f_cnt=f_cnt, edges=edges)
 
 
 def delta_taint_seeds(g_old: Graph, delta, D0: jax.Array):
@@ -201,9 +253,27 @@ def delta_taint_seeds(g_old: Graph, delta, D0: jax.Array):
     return seeds, pure_increase
 
 
+def delta_decrease_sources(g_old: Graph, delta) -> jax.Array:
+    """bool[n] — tails of *decreased* delta edges (jit-safe).
+
+    The sparse-frontier warm start needs these: a decreased edge's tail
+    is the one fixed vertex whose out-edge offers genuinely changed
+    without its own distance changing, so it must be seeded into the
+    warm frontier buffer alongside the taint cone's in-boundary
+    (``_init_state_warm``).  Source-independent — one mask serves every
+    vmapped lane of a warm refresh batch.
+    """
+    valid = delta.edge_idx < g_old.e_pad
+    idx = jnp.minimum(delta.edge_idx, g_old.e_pad - 1)
+    dec = valid & (delta.new_w < g_old.w[idx])
+    at = jnp.where(dec, g_old.src[idx], g_old.n)  # n = drop
+    return jnp.zeros((g_old.n,), bool).at[at].set(True, mode="drop")
+
+
 def _init_state_warm(g: Graph, prev_D: jax.Array, prev_fixed: jax.Array,
                      seeds: jax.Array, pure_increase: jax.Array,
-                     prims: backends.Primitives | None = None):
+                     prims: backends.Primitives | None = None,
+                     dec_src: jax.Array | None = None):
     """Warm-start state after a batch of weight changes (dynamic.py).
 
     The *affected cone* (``taint``) is every vertex whose old distance
@@ -229,6 +299,18 @@ def _init_state_warm(g: Graph, prev_D: jax.Array, prev_fixed: jax.Array,
 
     ``explored`` starts all-False so ``_cond`` forces at least one full
     relaxation round over the surviving fixed set under the new weights.
+
+    A frontier-capable ``prims`` seeds the compacted buffer from the
+    taint cone: the only surviving-fixed vertices whose round-1 offers
+    are not already folded into the warm state are (a) the cone's
+    in-boundary (the cone's D was reset to INF, so it needs fresh offers
+    from its fixed in-neighbours) and (b) tails of *decreased* delta
+    edges (``dec_src``; their offers got cheaper with no D change of
+    their own).  Every other fixed vertex's offers are no-ops against a
+    completed solve's triangle inequality — so the sparse round 1 is
+    bitwise-identical to the dense one.  ``dec_src=None`` (caller can't
+    name the delta) degrades to seeding ALL surviving fixed vertices —
+    still exact, usually overflowing into one dense round.
 
     Requires ``prev_fixed`` vertices to carry exact distances (any state
     a completed cold or warm solve returns).  Returns ``(state, sweeps,
@@ -256,14 +338,28 @@ def _init_state_warm(g: Graph, prev_D: jax.Array, prev_fixed: jax.Array,
     C = jnp.where(
         fixed, D,
         jnp.where(pure_increase & prev_fixed & (prev_D < INF), prev_D, 0.0))
+    cap = _frontier_cap(prims)
+    f_idx = f_cnt = edges = None
+    if cap:
+        if dec_src is None:
+            seed_mask = fixed & (D < INF)
+        else:
+            # in-boundary of the cone: fixed tails of edges into taint
+            at = jnp.where(g.gather_dst(taint, fill=False), g.src, g.n)
+            bnd = jnp.zeros((g.n,), bool).at[at].set(True, mode="drop")
+            seed_mask = (bnd | dec_src) & fixed & (D < INF)
+        f_idx, f_cnt = _compact_frontier(seed_mask, cap, g.n)
+        edges = jnp.int32(0)
     state = SSSPState(D=D, C=C, fixed=fixed,
                       explored=jnp.zeros_like(fixed), round=jnp.int32(0),
-                      fixed_by=jnp.zeros(5, jnp.int32))
+                      fixed_by=jnp.zeros(5, jnp.int32),
+                      f_idx=f_idx, f_cnt=f_cnt, edges=edges)
     return state, sweeps, taint
 
 
 def _solve_warm(g: Graph, cfg: SSSPConfig, prev_D, prev_fixed, seeds,
-                pure_increase, prims: backends.Primitives | None = None):
+                pure_increase, prims: backends.Primitives | None = None,
+                dec_src=None):
     """Warm re-solve to fixpoint on the (already-mutated) graph ``g``.
 
     Same ``lax.while_loop``/round body as ``_solve``, entered from
@@ -273,7 +369,7 @@ def _solve_warm(g: Graph, cfg: SSSPConfig, prev_D, prev_fixed, seeds,
     guaranteed by per-vertex monotone D).  Returns (state, sweeps, taint).
     """
     state, sweeps, taint = _init_state_warm(
-        g, prev_D, prev_fixed, seeds, pure_increase, prims)
+        g, prev_D, prev_fixed, seeds, pure_increase, prims, dec_src)
     max_rounds = (2 * cfg.max_rounds) if cfg.max_rounds else 2 * g.n + 4
     state = jax.lax.while_loop(
         lambda s: _cond(s, max_rounds),
@@ -308,10 +404,21 @@ def _round(g: Graph, cfg: SSSPConfig, state: SSSPState,
     non-increasing per vertex, so un-fix events are finite and the loop
     still ends only when a full round changed nothing — at which point D
     is a relaxation fixpoint with D[source]=0, i.e. exact.
+
+    A frontier-capable ``prims`` (``relax_frontier`` set) replaces ONLY
+    the step-1 D-relaxation with a gather over the compacted buffer of
+    vertices whose offers are new (see the frontier-maintenance block at
+    the end).  Everything a repeated offer could touch is monotone-min,
+    so skipping value-identical repeats is bitwise-neutral; on overflow
+    (``f_cnt > cap``) the round falls back to the dense relax.  The
+    other reductions (inWeight_nf, C-propagation, minD) stay dense —
+    they are full-vertex-set properties, not wavefront properties.
     """
     if prims is None:
         prims = backends.segment_prims(g)
     D, C, fixed = state.D, state.C, state.fixed
+    use_frontier = (getattr(prims, "relax_frontier", None) is not None
+                    and state.f_idx is not None)
 
     # --- Step 1: D relaxation (the R-exploration of SP1–SP3 / Step 3 of
     # SP4).  Relax FIRST, from previously-fixed sources (whose D is final),
@@ -324,7 +431,36 @@ def _round(g: Graph, cfg: SSSPConfig, state: SSSPState,
 
     need_inw = ("in" in cfg.rules) or ("pred" in cfg.rules)
     in_w_nf = None
-    if need_inw and prims.relax2 is not None:
+    edges = state.edges
+    if use_frontier:
+        cap = prims.frontier_cap
+        if cap >= g.n:
+            # a buffer the size of the vertex set can never overflow, so
+            # the fallback branch vanishes STATICALLY — this matters for
+            # vmapped (batched) solves, where a data-dependent lax.cond
+            # linearizes to select and would execute BOTH branches every
+            # round (dense + sparse); frontier_cap >= n is the escape
+            # hatch that keeps batches single-branch.
+            overflow = jnp.bool_(False)
+            D_relax = prims.relax_frontier(D, state.f_idx, relax_src)
+        else:
+            overflow = state.f_cnt > cap
+            D_relax = jax.lax.cond(
+                overflow,
+                lambda: prims.relax(D, relax_src),
+                lambda: prims.relax_frontier(D, state.f_idx, relax_src))
+        if need_inw:
+            in_w_nf = prims.in_weight_nf(~fixed)
+        # edges-relaxed accounting: actual out-degrees of the masked
+        # buffer on sparse rounds, the whole padded edge list on dense
+        # fallback rounds.
+        u = jnp.minimum(state.f_idx, g.n - 1)
+        live = (state.f_idx < g.n) & relax_src[u]
+        sparse_edges = jnp.sum(jnp.where(live, g.out_deg[u], 0),
+                               dtype=jnp.int32)
+        edges = edges + jnp.where(overflow, jnp.int32(g.e_pad),
+                                  sparse_edges)
+    elif need_inw and prims.relax2 is not None:
         D_relax, in_w_nf = prims.relax2(D, relax_src, ~fixed)
     else:
         D_relax = prims.relax(D, relax_src)
@@ -403,9 +539,24 @@ def _round(g: Graph, cfg: SSSPConfig, state: SSSPState,
         fixed2 = fixed1
         C = jnp.where(fixed2, D, C)
 
+    f_idx, f_cnt = state.f_idx, state.f_cnt
+    if use_frontier:
+        # --- frontier maintenance: compact the vertices whose NEXT-round
+        # offers are new.  Label-correcting relaxes from every discovered
+        # vertex, so new offers come exactly from D changes; label-setting
+        # relaxes from fixed vertices, so they come from fix events (incl.
+        # a warm unfix-refix, which always moves D).  Repeats the dense
+        # path would re-send are value-identical and min-folded — skipping
+        # them is bitwise-neutral.
+        if cfg.label_correcting:
+            fresh = D != state.D
+        else:
+            fresh = fixed2 & (~state.fixed | (D != state.D))
+        f_idx, f_cnt = _compact_frontier(fresh, prims.frontier_cap, g.n)
     return SSSPState(
         D=D, C=C, fixed=fixed2, explored=explored, round=state.round + 1,
-        fixed_by=state.fixed_by + jnp.stack(rule_counts))
+        fixed_by=state.fixed_by + jnp.stack(rule_counts),
+        f_idx=f_idx, f_cnt=f_cnt, edges=edges)
 
 
 def _cond(state: SSSPState, max_rounds: int, target=None):
@@ -431,7 +582,7 @@ def _solve(g: Graph, cfg: SSSPConfig, source,
            C0=None, target=None) -> SSSPState:
     """while_loop to fixpoint (or to ``target`` fixed, when given);
     ``source``/``target``/``C0`` may all be traced (vmap-able)."""
-    state = _init_state(g, source, C0)
+    state = _init_state(g, source, C0, prims)
     max_rounds = cfg.max_rounds or g.n + 2
     tgt = target if cfg.early_exit else None
     return jax.lax.while_loop(

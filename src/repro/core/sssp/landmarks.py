@@ -154,6 +154,10 @@ class LandmarkIndex:
         self.d_to: jax.Array | None = None     # float32[k, n]  d(v, L)
         self.stale = False
         self.seed_ok = True
+        # seed-tightness telemetry (mean C0[target]/dist[target] over
+        # served queries, fed by SSSPService): the re-selection signal.
+        self._tight_sum = 0.0
+        self._tight_cnt = 0
         self.landmarks = select_landmarks(self._fwd, self.k, seed=seed)
         self.refresh()
 
@@ -168,6 +172,7 @@ class LandmarkIndex:
         lms = [int(v) for v in self.landmarks]
         self.d_from = jnp.asarray(self._fwd.resolve(lms).dist)
         self.d_to = jnp.asarray(self._rev.resolve(lms).dist)
+        self._host_tables = None   # invalidate the estimate_pairs cache
         self.stale = False
         self.seed_ok = True
 
@@ -183,6 +188,74 @@ class LandmarkIndex:
             return None
         return self._seed_many(self.d_from, self.d_to,
                                jnp.asarray(sources, jnp.int32))
+
+    def estimate_pairs(self, pairs) -> np.ndarray | None:
+        """float64[B] seeded lower bound ``C0[t]`` per (source, target).
+
+        The scalar slice of :meth:`seed_batch` a query's own target
+        sees, computed host-side from the table columns (two [k, B]
+        gathers — no per-pair [n] vector is built).  The serving layer
+        sorts queued targeted queries by this at enqueue time, so
+        vmapped waves group short queries with short batches instead of
+        every lane paying the slowest one's rounds.  ``None`` when the
+        tables can't vouch for their bounds (same contract as ``seed``).
+        """
+        if not self.seed_ok or not len(pairs):
+            return None
+        s = np.asarray([p[0] for p in pairs], np.int64)
+        t = np.asarray([p[1] for p in pairs], np.int64)
+        if self._host_tables is None:   # one device pull per refresh,
+            self._host_tables = (       # not per serve wave
+                np.asarray(self.d_from, np.float64),
+                np.asarray(self.d_to, np.float64))
+        df, dt = self._host_tables      # [k, n] each
+        with np.errstate(invalid="ignore"):
+            fwd = df[:, t] - df[:, s]              # [k, B]
+            bwd = dt[:, s] - dt[:, t]
+        fwd = np.where(np.isnan(fwd), -np.inf, fwd)
+        bwd = np.where(np.isnan(bwd), -np.inf, bwd)
+        return np.maximum(np.maximum(fwd, bwd).max(axis=0), 0.0)
+
+    # ------------------------------------------------------------------
+    def record_tightness(self, ratios) -> None:
+        """Accumulate observed ``C0[target] / dist[target]`` ratios.
+
+        Fed by the serving layer for queries it answered with seeded
+        targeted solves (finite, nonzero distances only).  1.0 means the
+        seed was already exact; drifting toward 0 means the landmarks
+        have stopped explaining the metric (accumulated weight deltas)
+        and re-selection would pay.
+        """
+        ratios = np.asarray(ratios, np.float64).ravel()
+        ratios = ratios[np.isfinite(ratios)]
+        if ratios.size:
+            self._tight_sum += float(ratios.sum())
+            self._tight_cnt += int(ratios.size)
+
+    def tightness(self) -> float | None:
+        """Mean observed seed tightness (None before any observation)."""
+        if not self._tight_cnt:
+            return None
+        return self._tight_sum / self._tight_cnt
+
+    @property
+    def tightness_count(self) -> int:
+        """Number of ratios behind :meth:`tightness`."""
+        return self._tight_cnt
+
+    def needs_reselect(self, threshold: float = 0.5) -> bool:
+        """Re-selection hook: has mean seed tightness degraded below
+        ``threshold``?  Policy-free — the caller decides when to act
+        (and on True would typically re-run ``select_landmarks`` +
+        :meth:`refresh`, then reset via :meth:`reset_tightness`).
+        Never True without observations, or while seeding is already
+        disabled (``seed_ok=False`` has its own recovery: refresh)."""
+        m = self.tightness()
+        return bool(self.seed_ok and m is not None and m < float(threshold))
+
+    def reset_tightness(self) -> None:
+        self._tight_sum = 0.0
+        self._tight_cnt = 0
 
     # ------------------------------------------------------------------
     def reverse_delta(self, delta: GraphDelta) -> GraphDelta:

@@ -25,12 +25,13 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.graph import EllGraph, Graph, HostGraph, build_ell
+from repro.core.graph import (CsrGraph, EllGraph, Graph, HostGraph,
+                              build_ell)
 from repro.core.sssp import backends
 from repro.core.sssp.engine import (SP4_CONFIG, SSSPConfig, SSSPResult,
                                     _fixed_by_dict, _solve)
 
-BACKENDS = ("auto", "segment", "ell", "pallas", "distributed")
+BACKENDS = ("auto", "segment", "ell", "pallas", "distributed", "frontier")
 
 
 @dataclasses.dataclass
@@ -56,6 +57,7 @@ class SSSPBatchResult:
     graph: Graph | None = None
     targets: np.ndarray | None = None   # int32[B] (-1 = untargeted lane)
     partial: bool = False               # lanes may have early-exited
+    edges_relaxed: np.ndarray | None = None  # int32[B] (frontier backend)
 
     def __len__(self) -> int:
         return len(self.sources)
@@ -68,13 +70,36 @@ class SSSPBatchResult:
             dist=self.dist[i], C=self.C[i], fixed=self.fixed[i],
             rounds=int(self.rounds[i]), fixed_by=self.fixed_by[i],
             source=int(self.sources[i]), graph=self.graph,
-            target=t, partial=self.partial and t is not None)
+            target=t, partial=self.partial and t is not None,
+            edges_relaxed=None if self.edges_relaxed is None
+            else int(self.edges_relaxed[i]))
 
     __getitem__ = result
 
 
 def _next_pow2(x: int) -> int:
     return 1 << max(0, (x - 1).bit_length())
+
+
+def _frontier_fits(g: Graph) -> bool:
+    """``backend="auto"`` proxy for thin wavefronts.
+
+    The frontier backend wins when |frontier| / n stays low round over
+    round — that can't be known before solving, but two cheap structural
+    proxies track it well: low average degree (the wavefront grows
+    slowly: chain, grid) or bounded out-degree (kNN/road-like expansion:
+    geometric).  High fan-out families (gnp, dag, power_law hubs) blow
+    the wavefront to O(n) within a few rounds — dense wins there, and
+    hub out-degrees would bloat the ``cap * max_out_deg`` gather anyway.
+    """
+    if g.e == 0:
+        return False
+    max_out = int(np.max(np.asarray(g.out_deg))) if g.n else 0
+    return (g.e <= 4 * g.n or max_out <= 8) and max_out <= 64
+
+
+def _default_frontier_cap(n: int) -> int:
+    return _next_pow2(min(max(n // 4, 32), 4096))
 
 
 class Solver:
@@ -85,13 +110,27 @@ class Solver:
     graph:    a device ``Graph``, a ``HostGraph``, or an ``(n, src, dst,
               w)`` tuple of host arrays.
     cfg:      engine configuration (rules / label-correcting / c-prop).
-    backend:  "auto" | "segment" | "ell" | "pallas" | "distributed".
-              "auto" picks "pallas" when ``cfg.use_pallas`` else
-              "segment" (robust for every graph family, including
-              power-law in-degree skew that the dense ELL layout hates).
+    backend:  "auto" | "segment" | "ell" | "pallas" | "distributed" |
+              "frontier".
+              "auto" picks "pallas" when ``cfg.use_pallas``, else
+              "frontier" when the graph's structure predicts thin
+              wavefronts (low average degree or bounded out-degree —
+              chain/grid/road-like), else "segment" (robust for every
+              family, including power-law in-degree skew that the dense
+              ELL layout hates).
     ell:      pre-built :class:`EllGraph` for the ell/pallas backends
               (built from the graph's edges when omitted).
     mesh/axes: mesh placement for the "distributed" backend.
+    frontier_cap: compacted-buffer size for the "frontier" backend
+              (rounded up to a power of two; default scales with n).  A
+              round whose wavefront outgrows it falls back to the dense
+              relax for that round — results stay bitwise-identical,
+              only the work bound degrades.  Scope: the sparse rounds
+              apply to UNBATCHED solves (``solve``); ``solve_batch``
+              and the warm-refresh program run the dense round body
+              under vmap (bitwise-identical, and measured faster — the
+              vmapped gather/scatter relax loses to the segment round;
+              a shared per-batch frontier is on the roadmap).
 
     ``trace_count`` counts XLA traces actually performed — the regression
     tests assert it stays at one per (program, batch-shape), however many
@@ -101,7 +140,8 @@ class Solver:
     def __init__(self, graph, cfg: SSSPConfig = SP4_CONFIG,
                  backend: str = "auto", *, ell: EllGraph | None = None,
                  mesh=None, axes: tuple[str, ...] = ("data",),
-                 max_deg_cap: int | None = None):
+                 max_deg_cap: int | None = None,
+                 frontier_cap: int | None = None):
         if backend not in BACKENDS:
             raise ValueError(f"unknown backend {backend!r}; "
                              f"expected one of {BACKENDS}")
@@ -114,20 +154,30 @@ class Solver:
             raise TypeError(f"graph must be Graph/HostGraph/tuple, "
                             f"got {type(graph)!r}")
         if backend == "auto":
-            backend = "pallas" if cfg.use_pallas else "segment"
+            if cfg.use_pallas:
+                backend = "pallas"
+            elif _frontier_fits(graph):
+                backend = "frontier"
+            else:
+                backend = "segment"
         # normalize cfg.use_pallas to the chosen backend in BOTH
         # directions: "pallas" forces it on, every other backend forces
         # it off — otherwise SSSPConfig(use_pallas=True) silently routes
-        # the "ell" backend through the Pallas kernels.
+        # the "ell" backend through the Pallas kernels.  "frontier" is
+        # the exception that honors the flag as given: it routes its OWN
+        # scatter-min kernel (never the ELL kernels), with the jnp
+        # oracle as the default path.
         if backend == "pallas":
             cfg = dataclasses.replace(cfg, use_pallas=True)
-        elif cfg.use_pallas:
+        elif cfg.use_pallas and backend != "frontier":
             cfg = dataclasses.replace(cfg, use_pallas=False)
         self.graph = graph
         self.cfg = cfg
         self.backend = backend
         self.trace_count = 0
         self.ell: EllGraph | None = None
+        self.csr: CsrGraph | None = None
+        self.frontier_cap = 0
 
         if backend in ("ell", "pallas"):
             if ell is None:
@@ -137,16 +187,25 @@ class Solver:
                                 np.asarray(graph.w[:e]),
                                 max_deg_cap=max_deg_cap)
             self.ell = ell
+        if backend == "frontier":
+            self.csr = graph.csr()
+            self.frontier_cap = _next_pow2(
+                _default_frontier_cap(graph.n) if frontier_cap is None
+                else max(1, int(frontier_cap)))
 
         def _count_trace():
             self.trace_count += 1  # python side effect: runs per TRACE
 
-        # ``ell`` rides through jit as a traced pytree operand (None
-        # for the segment backend): baked-in constants would bloat
-        # every compiled batch shape with the [n_pad, deg_pad] arrays.
-        def _prims(g, ell):
+        # ``ell``/``csr`` ride through jit as traced pytree operands
+        # (None where unused): baked-in constants would bloat every
+        # compiled batch shape with the layout arrays.
+        cap, use_pallas = self.frontier_cap, cfg.use_pallas
+
+        def _prims(g, ell, csr):
+            if csr is not None:
+                return backends.frontier_prims(g, csr, cap, use_pallas)
             if ell is not None:
-                return backends.ell_prims(g, ell, cfg.use_pallas)
+                return backends.ell_prims(g, ell, use_pallas)
             return backends.segment_prims(g)
 
         self._make_prims = _prims  # DynamicSolver builds warm programs
@@ -165,15 +224,24 @@ class Solver:
             # target (int32, -1 = none) and C0 (lower-bound seeds) are
             # TRACED operands like the source: targeted, seeded, and
             # plain solves all share one compiled program per shape.
-            def solve_one(g, ell, source, target, C0):
+            def solve_one(g, ell, csr, source, target, C0):
                 _count_trace()
-                return _solve(g, cfg, source, prims=_prims(g, ell),
+                return _solve(g, cfg, source, prims=_prims(g, ell, csr),
                               C0=C0, target=target)
 
-            def solve_many(g, ell, sources, targets, C0):
+            def solve_many(g, ell, csr, sources, targets, C0):
                 _count_trace()
+                # batched lanes run the DENSE round body even on the
+                # frontier backend (csr arrives as None below): under
+                # vmap the overflow cond linearizes to select — both
+                # branches execute per round — and the batched
+                # gather/scatter relax measures 3-5x slower than the
+                # segment round outright, so sparse batches lose until
+                # the roadmapped shared per-batch frontier buffer
+                # lands.  Results are bitwise-identical either way.
                 return jax.vmap(
-                    lambda s, t, c: _solve(g, cfg, s, prims=_prims(g, ell),
+                    lambda s, t, c: _solve(g, cfg, s,
+                                           prims=_prims(g, ell, csr),
                                            C0=c, target=t)
                 )(sources, targets, C0)
 
@@ -212,13 +280,16 @@ class Solver:
         t = jnp.int32(-1 if target is None else int(target))
         c0 = (jnp.zeros((self.graph.n,), jnp.float32) if C0 is None
               else jnp.asarray(C0, jnp.float32))
-        state = self._jit_one(self.graph, self.ell, jnp.int32(source), t, c0)
+        state = self._jit_one(self.graph, self.ell, self.csr,
+                              jnp.int32(source), t, c0)
         partial = target is not None and self.cfg.early_exit
         return SSSPResult(
             dist=state.D, C=state.C, fixed=state.fixed,
             rounds=int(state.round), fixed_by=_fixed_by_dict(state.fixed_by),
             source=int(source), graph=self.graph,
-            target=target, partial=partial)
+            target=target, partial=partial,
+            edges_relaxed=None if state.edges is None
+            else int(state.edges))
 
     def solve_batch(self, sources, targets=None, C0=None) -> SSSPBatchResult:
         """Distances from B sources via one vmapped program.
@@ -267,7 +338,9 @@ class Solver:
         if self._sharded_batch is not None:
             state = self._sharded_batch(padded, self.graph, tpad, c0)
         else:
-            state = self._jit_batch(self.graph, self.ell,
+            # csr=None: batched solves take the dense round (see
+            # solve_many) — the frontier win is per-solve, not per-batch
+            state = self._jit_batch(self.graph, self.ell, None,
                                     jnp.asarray(padded),
                                     jnp.asarray(tpad), c0)
         fb = np.asarray(state.fixed_by)
@@ -278,4 +351,6 @@ class Solver:
             fixed_by=[_fixed_by_dict(fb[i]) for i in range(b)],
             graph=self.graph,
             targets=None if targets is None else targets,
-            partial=targets is not None and self.cfg.early_exit)
+            partial=targets is not None and self.cfg.early_exit,
+            edges_relaxed=None if state.edges is None
+            else np.asarray(state.edges[:b]))

@@ -1,0 +1,86 @@
+"""Pallas TPU kernel: compacted-frontier relax scatter-min.
+
+The sparse-frontier round (core/sssp/frontier backend) gathers the
+out-edges of the few vertices in the compacted frontier buffer and
+scatter-MINs their relax candidates into the distance vector — per-round
+work proportional to the wavefront, not the graph.  The XLA wrapper
+(kernels/ops.frontier_relax) does the CSR gather (cand = x[u] + w and
+the destination ids, both ``[cap, max_out_deg]``); this kernel owns the
+scatter reduction:
+
+    out[v] = min over cells (i, j) with tgt[i, j] == v of cand[i, j]
+
+TPU adaptation (same move as relax.py / segment_min.py): the grid walks
+frontier-row blocks *sequentially*, so the same output row accumulates
+its running min across steps in VMEM — the PRAM's CRCW concurrent-min
+write becomes an ordered in-VMEM min, no atomics.  Within a step the
+scatter is a serial fori_loop of dynamic-index load/min/store (the
+sparse, data-dependent addressing is the whole point of the kernel; a
+production variant would scalar-prefetch the frontier ids via
+``PrefetchScalarGridSpec``).  Padding cells carry ``cand = +inf`` so
+their writes are no-ops wherever they land — the wrapper may therefore
+clamp sentinel targets instead of branching.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_BLOCK_ROWS = 8
+
+
+def _scatter_min_kernel(tgt_ref, cand_ref, out_ref):
+    i = pl.program_id(0)
+
+    @pl.when(i == 0)
+    def _init():
+        out_ref[...] = jnp.full_like(out_ref, jnp.inf)
+
+    rows, cols = tgt_ref.shape
+    width = out_ref.shape[-1]
+
+    def cell(k, _):
+        r, c = k // cols, k % cols
+        t = jnp.minimum(tgt_ref[r, c], width - 1)  # inf cand -> no-op
+        v = cand_ref[r, c]
+        at = (pl.dslice(0, 1), pl.dslice(t, 1))
+        pl.store(out_ref, at, jnp.minimum(pl.load(out_ref, at), v))
+        return 0
+
+    jax.lax.fori_loop(0, rows * cols, cell, 0)
+
+
+@functools.partial(jax.jit, static_argnames=("n", "block_rows", "interpret"))
+def frontier_scatter_min(tgt: jax.Array, cand: jax.Array, n: int,
+                         *, block_rows: int = DEFAULT_BLOCK_ROWS,
+                         interpret: bool = True) -> jax.Array:
+    """int32/float32[cap, deg] scatter-min -> float32[n].
+
+    ``tgt`` cells >= n are padding (their ``cand`` must be +inf); the
+    output width is padded past ``n`` so they land in a scratch lane.
+    """
+    rows, cols = tgt.shape
+    rows_pad = max(block_rows,
+                   (rows + block_rows - 1) // block_rows * block_rows)
+    cols_pad = max(128, (cols + 127) // 128 * 128)
+    if (rows_pad, cols_pad) != (rows, cols):
+        tgt = jnp.pad(tgt, ((0, rows_pad - rows), (0, cols_pad - cols)),
+                      constant_values=n)
+        cand = jnp.pad(cand, ((0, rows_pad - rows), (0, cols_pad - cols)),
+                       constant_values=jnp.inf)
+    width = (n // 128 + 1) * 128   # >= n + 1: sentinel writes stay out
+    out = pl.pallas_call(
+        _scatter_min_kernel,
+        grid=(rows_pad // block_rows,),
+        in_specs=[
+            pl.BlockSpec((block_rows, cols_pad), lambda i: (i, 0)),
+            pl.BlockSpec((block_rows, cols_pad), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, width), lambda i: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((1, width), jnp.float32),
+        interpret=interpret,
+    )(tgt, cand.astype(jnp.float32))
+    return out[0, :n]

@@ -13,8 +13,10 @@ import os
 import jax
 import jax.numpy as jnp
 
-from repro.core.graph import EllGraph
+from repro.core.graph import CsrGraph, EllGraph
 from repro.kernels import ref
+from repro.kernels.frontier_relax import (
+    frontier_scatter_min as _frontier_scatter_pallas)
 from repro.kernels.relax import relax_ell as _relax_pallas
 from repro.kernels.segment_min import masked_min as _masked_min_pallas
 from repro.kernels.cin import cin_layer as _cin_pallas
@@ -51,6 +53,39 @@ def relax_ell(D: jax.Array, ell: EllGraph, src_mask: jax.Array,
     else:
         out = ref.relax_ell_ref(d_src, ell.in_w, mask)
     return out[: ell.n]
+
+
+def frontier_relax(x: jax.Array, csr: CsrGraph, f_idx: jax.Array,
+                   src_mask: jax.Array,
+                   *, use_pallas: bool | None = None) -> jax.Array:
+    """Sparse-frontier relax: min over out-edges of the buffered vertices.
+
+    x: float32[n] vertex values; f_idx: int32[cap] compacted frontier
+    buffer (padding slots carry ``n``); src_mask: bool[n] (which sources
+    may relax this round — label-setting masks non-fixed ones out).
+    Returns float32[n]: per-vertex min of ``x[u] + w`` over CSR
+    out-edges (u, v, w) with u buffered and masked, +inf elsewhere —
+    the same candidate multiset the dense relax reduces for those
+    sources, hence bitwise-identical where it matters (min-folding).
+
+    The gather is bounded by ``cap * csr.max_out_deg`` edge slots —
+    wavefront-proportional; the graph's ``e_pad`` never appears.  The
+    scatter-min runs through the Pallas kernel (kernels/frontier_relax)
+    when selected, the jnp ``.at[].min`` oracle otherwise.
+    """
+    n = csr.n
+    u = jnp.minimum(f_idx, n - 1)              # clamp: pure gathers below
+    slot_ok = (f_idx < n) & src_mask[u]
+    base = csr.indptr[u]                       # int32[cap]
+    deg = csr.indptr[u + 1] - base
+    j = jnp.arange(csr.max_out_deg, dtype=jnp.int32)[None, :]
+    cell_ok = slot_ok[:, None] & (j < deg[:, None])
+    epos = jnp.minimum(base[:, None] + j, csr.e_pad - 1)
+    tgt = jnp.where(cell_ok, csr.dst[epos], n)      # n = dropped
+    cand = jnp.where(cell_ok, x[u][:, None] + csr.w[epos], jnp.inf)
+    if _use_pallas(use_pallas):
+        return _frontier_scatter_pallas(tgt, cand, n)
+    return ref.frontier_scatter_min_ref(tgt, cand, n)
 
 
 def masked_min(x: jax.Array, mask: jax.Array,

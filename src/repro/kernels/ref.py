@@ -27,6 +27,20 @@ def masked_min_ref(x: jnp.ndarray, mask: jnp.ndarray) -> jnp.ndarray:
     return jnp.min(jnp.where(mask, x, jnp.inf))
 
 
+def frontier_scatter_min_ref(tgt: jnp.ndarray, cand: jnp.ndarray,
+                             n: int) -> jnp.ndarray:
+    """Scatter-min of candidate values at target vertices -> float32[n].
+
+    tgt[i, j] int32: destination vertex of the j-th out-edge of the i-th
+    frontier-buffer vertex (``n`` = dropped padding cell),
+    cand[i, j] float32: its relax candidate (+inf on padding cells).
+    Min is associative/commutative and exact in f32, so the scatter
+    order never shows — bitwise equal to any segment/sequential min.
+    """
+    out = jnp.full((n + 1,), jnp.inf, jnp.float32).at[tgt].min(cand)
+    return out[:n]
+
+
 def cin_layer_ref(x_k: jnp.ndarray, x_0: jnp.ndarray,
                   w: jnp.ndarray) -> jnp.ndarray:
     """xDeepFM CIN layer.

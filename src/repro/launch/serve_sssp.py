@@ -38,7 +38,7 @@ def main() -> None:
     ap.add_argument("--batch", type=int, default=8)
     ap.add_argument("--backend", default="auto",
                     choices=["auto", "segment", "ell", "pallas",
-                             "distributed"])
+                             "distributed", "frontier"])
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--verify", action="store_true")
     ap.add_argument("--deltas", type=int, default=0,

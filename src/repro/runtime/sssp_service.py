@@ -113,7 +113,8 @@ class SSSPService:
         self.stats = dict(queries=0, batches=0, sources_solved=0,
                           cache_hits=0, solve_seconds=0.0, deltas=0,
                           delta_seconds=0.0, warm_refreshed=0,
-                          p2p_solves=0)
+                          p2p_solves=0, seed_tightness_mean=None,
+                          seed_tightness_count=0)
 
     # ------------------------------------------------------------------
     @property
@@ -300,6 +301,18 @@ class SSSPService:
             else:
                 need.append((q.source, q.target))
         need = list(dict.fromkeys(need))
+        # Per-lane round capping: a vmapped wave runs for the MAX over
+        # lanes of the per-lane (early-exited) round counts, so one far
+        # target holds every short query of its batch hostage.  Sorting
+        # the queue by the landmark estimate C0[t] at enqueue time
+        # groups short queries with short batches (estimate order tracks
+        # round-count order because seeded bounds certify near targets
+        # in few rounds).  Stable sort: equal estimates keep FIFO order.
+        if self.landmarks is not None and len(need) > 1:
+            est = self.landmarks.estimate_pairs(need)
+            if est is not None:
+                order = np.argsort(est, kind="stable")
+                need = [need[i] for i in order]
         solved: dict[tuple[int, int], SSSPResult] = {}
         for at in range(0, len(need), self.batch):
             chunk = need[at: at + self.batch]
@@ -318,6 +331,8 @@ class SSSPService:
                 res = batch_res[i]
                 solved[(s, t)] = res
                 self._admit(s, res, partial=batch_res.partial)
+            if C0 is not None:
+                self._record_tightness(C0, batch_res, chunk)
         paid: set[tuple[int, int]] = set()
         for q in queries:
             res = hits.get(id(q))
@@ -337,6 +352,29 @@ class SSSPService:
                       if np.isfinite(q.distance) else None)
             q.done = True
         return queries
+
+    def _record_tightness(self, C0, batch_res, chunk) -> None:
+        """Seed-tightness telemetry: mean ``C0[target] / dist[target]``
+        over served seeded queries (1.0 = seed already exact, → 0 =
+        landmarks drifting off the mutated metric).  Kept in ``stats``
+        and mirrored into the :class:`LandmarkIndex`, whose
+        ``needs_reselect(threshold)`` turns it into the re-selection
+        signal (metric + hook; acting on it stays the operator's call).
+        """
+        c0 = np.asarray(C0, np.float64)
+        d = np.asarray(batch_res.dist, np.float64)
+        idx = np.arange(len(chunk))
+        tgt = np.asarray([t for _, t in chunk], np.int64)
+        dist = d[idx, tgt]
+        seed = c0[idx, tgt]
+        ok = np.isfinite(dist) & (dist > 0) & np.isfinite(seed)
+        if not ok.any():
+            return
+        self.landmarks.record_tightness(seed[ok] / dist[ok])
+        # single source of truth: the index's accumulator (so a
+        # reset_tightness() is reflected here too, never a stale fork)
+        self.stats["seed_tightness_mean"] = self.landmarks.tightness()
+        self.stats["seed_tightness_count"] = self.landmarks.tightness_count
 
     def distances(self, source: int) -> np.ndarray:
         """Full distance vector for one source (through the cache)."""

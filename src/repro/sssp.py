@@ -7,11 +7,13 @@
     batch = solver.solve_batch([0, 7, 42]) # many sources, one program
     batch[1].path_to(99)                   # lazy parents/paths
 
-Backends (``backend=``): "segment" (default; dst-sorted edge list),
-"ell"/"pallas" (dense in-neighbour layout, jnp oracle or Pallas TPU
-kernels), "distributed" (edge-sharded shard_map over the mesh).  All run
-the same round body (engine._round) through the backend-primitives
-protocol (backends.Primitives).
+Backends (``backend=``): "segment" (dst-sorted edge list), "ell"/
+"pallas" (dense in-neighbour layout, jnp oracle or Pallas TPU kernels),
+"distributed" (edge-sharded shard_map over the mesh), "frontier"
+(compacted sparse-frontier rounds over the CSR out-edge view —
+wavefront-proportional relax work; "auto" picks it for thin-wavefront
+graphs).  All run the same round body (engine._round) through the
+backend-primitives protocol (backends.Primitives).
 
 Dynamic graphs (weight streams) go through the dynamic subsystem:
 
@@ -31,7 +33,8 @@ The legacy entry points ``run_sssp`` / ``run_sssp_ell`` /
 ``run_sssp_distributed`` remain importable here as deprecation shims.
 """
 from repro.core.graph import (  # noqa: F401
-    EllGraph, Graph, HostGraph, build_ell, build_graph)
+    CsrGraph, EllGraph, Graph, HostGraph, build_csr, build_ell,
+    build_graph)
 from repro.core.sssp.backends import Primitives  # noqa: F401
 from repro.core.sssp.dynamic import (  # noqa: F401
     DynamicSolver, GraphDelta, make_delta, make_delta_from_endpoints,
