@@ -18,6 +18,13 @@ are bitwise-equal), edges relaxed per solve, and wall-time:
                    hardware-work ceiling next to the algorithmic
                    edge_ratio headline
 
+Roofline context (the ROADMAP ask — % of peak, not just speedup-vs-
+before): per backend the compiled cold program's ``cost_analysis``
+bytes are PER-ROUND (XLA counts a while-loop body once; see
+``launch/roofline.py``), so ``bytes_round * rounds / wall_time`` is the
+achieved HBM bandwidth, reported as ``gbps_*`` and ``roofline_pct_*``
+(fraction of the per-chip ``HBM_BW`` peak).
+
 Each invocation appends rows to ``experiments/bench/frontier.json`` so
 successive PRs accumulate a trajectory.
 
@@ -42,6 +49,29 @@ def _time(fn, reps: int) -> float:
         fn()
         best = min(best, time.perf_counter() - t0)
     return best
+
+
+def _achieved(solver, results, ms_per_solve) -> tuple[float, float]:
+    """Achieved HBM bandwidth for one backend's cold solves.
+
+    ``cost_analysis`` on the compiled program reports the while-loop
+    round body ONCE regardless of trip count (the calibration fact
+    ``launch/roofline.py`` documents), so its byte count is per-round:
+    bytes * rounds / wall-time = achieved GB/s, and the roofline
+    percentage divides by the per-chip HBM peak.
+    """
+    import jax.numpy as jnp
+    from repro.launch.roofline import HBM_BW, cost_dict
+
+    g = solver.graph
+    compiled = solver._jit_one.lower(
+        g, solver.ell, solver.csr, jnp.int32(results[0].source),
+        jnp.int32(-1), jnp.zeros((g.n,), jnp.float32)).compile()
+    per_round = float(cost_dict(compiled).get("bytes accessed", 0.0))
+    rounds = float(np.mean([r.rounds for r in results]))
+    secs = ms_per_solve / 1e3
+    gbps = per_round * rounds / secs / 1e9 if secs > 0 else 0.0
+    return round(gbps, 2), round(100.0 * gbps * 1e9 / HBM_BW, 3)
 
 
 def run(n: int = 2000, families=("chain", "grid", "gnp", "geometric"),
@@ -86,6 +116,8 @@ def run(n: int = 2000, families=("chain", "grid", "gnp", "geometric"),
         edges_front = sum(r.edges_relaxed for r in cold_f)
         edges_dense_t = sum(r.rounds for r in tgt_d) * g.e_pad
         edges_front_t = sum(r.edges_relaxed for r in tgt_f)
+        gbps_d, pct_d = _achieved(dense, cold_d, ms_cold_d)
+        gbps_f, pct_f = _achieved(front, cold_f, ms_cold_f)
         rows.append({
             "family": family, "n": nn, "e": hg.e, "e_pad": g.e_pad,
             "cap": front.frontier_cap,
@@ -102,6 +134,8 @@ def run(n: int = 2000, families=("chain", "grid", "gnp", "geometric"),
                 edges_dense_t / max(edges_front_t, 1), 2),
             "ms_dense_cold": round(ms_cold_d, 3),
             "ms_frontier_cold": round(ms_cold_f, 3),
+            "gbps_dense": gbps_d, "roofline_pct_dense": pct_d,
+            "gbps_frontier": gbps_f, "roofline_pct_frontier": pct_f,
             "ms_dense_targeted": round(ms_tgt_d, 3),
             "ms_frontier_targeted": round(ms_tgt_f, 3),
             "traces": front.trace_count,

@@ -1,0 +1,229 @@
+"""Query-serving engine v2 under a Zipf load: planner vs always-full.
+
+The serving claim of this repo is that the engine's per-round
+parallelism only pays off at the service layer if routing is right:
+a skewed stream (popular sources AND popular targets, independent Zipf
+ranks — the "millions of users" regime) is replayed against
+
+  * ``always_full``  — the pre-landmark serving path: every miss is a
+    full batched solve, repeats hit the source cache;
+  * ``planner_bidi`` — query-engine v2: landmark-seeded targeted waves,
+    bidirectional meet-in-the-middle solves for the far tail, full
+    solves only for slot-hogging sources, cost-model routing
+    (:class:`~repro.runtime.planner.WavePlanner`), plus the landmark
+    re-selection policy.
+
+Both configs see the identical stream and the identical interleaved
+``GraphDelta`` drift.  Three phases: (A) steady state, (B) drift —
+heavy weight deltas land between waves and seed tightness degrades
+(tables refresh but the landmark POSITIONS were picked for the old
+metric), (C) recovery — the re-selection policy re-picks positions on
+the drifted graph and tightness is measured again.  Per config the
+bench reports sustained qps and per-query p50/p99 latency (a query's
+latency is its wave's wall time — waves complete together), and for
+the planner config the route counts and the per-phase tightness story.
+
+  python -m benchmarks.bench_serve [--smoke] [--no-record]
+
+Appends to ``experiments/bench/serve.json``.  The full run asserts the
+planner beats the always-full baseline on sustained qps and that
+re-selection restores mean seed tightness after drift; ``--smoke``
+asserts p99 is finite and at least two planner routes were exercised.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+import numpy as np
+
+BENCH_JSON = os.path.join("experiments", "bench", "serve.json")
+
+
+def _zipf_pairs(rng, n: int, count: int, a: float,
+                perm_s: np.ndarray, perm_t: np.ndarray) -> list[tuple]:
+    """Zipf-ranked (source, target): rank r -> the r-th most popular
+    vertex, with independent popularity orders for the two endpoints."""
+    s = (rng.zipf(a, count) - 1) % n
+    t = (rng.zipf(a, count) - 1) % n
+    return [(int(perm_s[i]), int(perm_t[j])) for i, j in zip(s, t)]
+
+
+def _percentile_ms(wave_secs: list[float], wave_sizes: list[int],
+                   q: float) -> float:
+    """Per-query latency percentile: each query's latency is its wave's
+    wall time, so percentiles weight wave times by wave size."""
+    lat = np.repeat(np.asarray(wave_secs), np.asarray(wave_sizes))
+    return float(np.percentile(lat, q) * 1000.0)
+
+
+def run(n: int = 2000, wave: int = 32, waves_a: int = 4, waves_b: int = 4,
+        waves_c: int = 4, batch: int = 8, k: int = 8, zipf_a: float = 1.3,
+        seed: int = 0, family: str = "geometric") -> list[dict]:
+    from repro.core import generators as gen
+    from repro.core.graph import HostGraph
+    from repro.runtime.sssp_service import Query, SSSPService
+    from repro.sssp import random_delta
+
+    nn, src, dst, w = gen.make(family, n, seed=seed)
+    hg = HostGraph(nn, src, dst, w)
+    rng = np.random.default_rng(seed)
+    perm_s = rng.permutation(nn)
+    perm_t = rng.permutation(nn)
+    total_waves = waves_a + waves_b + waves_c
+    stream = [_zipf_pairs(rng, nn, wave, zipf_a, perm_s, perm_t)
+              for _ in range(total_waves + 1)]   # +1 warmup wave
+    # identical heavy drift for both configs.  Uniform random rescaling
+    # barely moves landmark-position quality (tables refresh; positions
+    # stay near-optimal), so drift is REGIONAL: each step multiplies
+    # the out-edge weights of a contiguous third of the vertex ids by
+    # 10-50x, warping the metric the landmarks were picked for.
+    g0 = hg.to_device()
+    gsrc = np.asarray(g0.src[: g0.e])
+    gw = np.asarray(g0.w[: g0.e], np.float32)
+    drift = []
+    for _ in range(waves_b):
+        lo = int(rng.integers(0, nn))
+        idx = np.flatnonzero(((gsrc - lo) % nn) < max(1, nn // 3))
+        scale = rng.uniform(10.0, 50.0, idx.size).astype(np.float32)
+        drift.append((idx, gw[idx] * scale))
+    drift_k = int(np.mean([len(i) for i, _ in drift])) if drift else 0
+
+    def play(svc, label: str) -> dict:
+        from repro.sssp import make_delta
+        secs, sizes = [], []
+        svc.serve([Query(s, t) for s, t in stream[0]])   # warm compile
+        # compile the planner's power-of-two wave shapes and the
+        # bidirectional program outside the timed window
+        rng_w = np.random.default_rng(seed + 999)
+        for size in (5, 3, 2, 1):
+            ps = rng_w.integers(0, nn, (size, 2))
+            svc.serve([Query(int(a), int(b)) for a, b in ps])
+        if svc._bidi is not None:
+            # compile AND cost-model the bidirectional program here, so
+            # the planner's explore-vs-gate decision is already informed
+            # when the timed waves start
+            t0 = time.perf_counter()
+            svc._bidi.solve(int(rng_w.integers(nn)),
+                            int(rng_w.integers(nn)))
+            if svc.planner is not None:
+                svc.planner.observe("bidirectional",
+                                    time.perf_counter() - t0, 1)
+        phase_tight = {}
+
+        def serve_waves(ws, offset):
+            for i in range(ws):
+                qs = [Query(s, t) for s, t in stream[1 + offset + i]]
+                t0 = time.perf_counter()
+                svc.serve(qs)
+                secs.append(time.perf_counter() - t0)
+                sizes.append(len(qs))
+
+        lm = svc.landmarks
+        if lm is not None:
+            lm.reset_tightness()
+        serve_waves(waves_a, 0)                          # phase A: steady
+        if lm is not None:
+            phase_tight["pre"] = lm.tightness()
+            lm.reset_tightness()
+        for i in range(waves_b):                         # phase B: drift
+            idx, new_w = drift[i]
+            svc.apply_delta(make_delta(svc.solver.graph, idx, new_w))
+            serve_waves(1, waves_a + i)
+        if lm is not None:
+            phase_tight["drift"] = lm.tightness()
+            # arm the policy against the measured steady-state level:
+            # re-select only if drift really degraded the seeds
+            from repro.sssp import ReselectPolicy
+            svc.reselect_policy = ReselectPolicy(
+                threshold=0.97 * (phase_tight["pre"] or 1.0),
+                min_observations=min(16, max(1, svc.stats[
+                    "seed_tightness_count"])),
+                cooldown_deltas=1)
+        serve_waves(waves_c, waves_a + waves_b)          # phase C: recover
+        if lm is not None:
+            phase_tight["post"] = lm.tightness()
+        st = svc.stats
+        total = sum(secs)
+        row = {
+            "config": label, "family": family, "n": nn, "e": hg.e,
+            "wave": wave, "waves": total_waves, "batch": batch,
+            "zipf_a": zipf_a, "queries": int(sum(sizes)),
+            "deltas": st["deltas"], "drift_edges": drift_k,
+            "qps": round(sum(sizes) / total, 1) if total else float("inf"),
+            "p50_ms": round(_percentile_ms(secs, sizes, 50), 2),
+            "p99_ms": round(_percentile_ms(secs, sizes, 99), 2),
+            "cache_hits": st["cache_hits"],
+            "sources_solved": st["sources_solved"],
+            "p2p_solves": st["p2p_solves"],
+            "bidi_solves": st["bidi_solves"],
+            "reselects": st["reselects"],
+            "routes": dict(st["planner_routes"]),
+        }
+        for ph, v in phase_tight.items():
+            row[f"tightness_{ph}"] = None if v is None else round(v, 4)
+        return row
+
+    base = SSSPService(g0, batch=batch, p2p=False)
+    rows = [play(base, "always_full")]
+    svc = SSSPService(g0, batch=batch, landmarks=k,
+                      landmark_seed=seed, planner=True, bidirectional=True)
+    rows.append(play(svc, "planner_bidi"))
+    return rows
+
+
+def record(rows: list[dict], path: str = BENCH_JSON) -> None:
+    """Append this run's rows to the json trajectory (list of runs)."""
+    os.makedirs(os.path.dirname(path), exist_ok=True)
+    traj = []
+    if os.path.exists(path):
+        with open(path) as f:
+            traj = json.load(f)
+    traj.append({"ts": time.strftime("%Y-%m-%dT%H:%M:%S"), "rows": rows})
+    with open(path, "w") as f:
+        json.dump(traj, f, indent=1)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="small sizes, relaxed assertions (CI)")
+    ap.add_argument("--n", type=int, default=None)
+    ap.add_argument("--no-record", action="store_true")
+    args = ap.parse_args()
+
+    n = args.n or (300 if args.smoke else 2000)
+    if args.smoke:
+        rows = run(n=n, wave=16, waves_a=2, waves_b=2, waves_c=2, k=4)
+    else:
+        rows = run(n=n)
+    for r in rows:
+        print(r)
+    base, plan = rows[0], rows[1]
+    if not (np.isfinite(base["p99_ms"]) and np.isfinite(plan["p99_ms"])):
+        raise SystemExit(f"p99 not finite: {base['p99_ms']} "
+                         f"/ {plan['p99_ms']}")
+    exercised = [r for r, c in plan["routes"].items() if c > 0]
+    if len(exercised) < 2:
+        raise SystemExit(f"planner routes not exercised: {plan['routes']}")
+    if not args.smoke:
+        if plan["qps"] <= base["qps"]:
+            raise SystemExit(
+                f"planner did not beat always-full: "
+                f"{plan['qps']} <= {base['qps']} qps")
+        if (plan["reselects"] > 0
+                and plan["tightness_post"] is not None
+                and plan["tightness_drift"] is not None
+                and plan["tightness_post"] < plan["tightness_drift"]):
+            raise SystemExit(
+                f"re-selection did not restore tightness: "
+                f"{plan['tightness_drift']} -> {plan['tightness_post']}")
+    if not args.no_record:
+        record(rows)
+        print(f"appended to {BENCH_JSON}")
+
+
+if __name__ == "__main__":
+    main()

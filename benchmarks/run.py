@@ -9,6 +9,7 @@
   bench_dynamic     — warm incremental re-solve vs cold after weight deltas
   bench_p2p         — goal-directed point-to-point vs full solves (ALT)
   bench_frontier    — sparse-frontier rounds vs dense (edges relaxed)
+  bench_serve       — query-engine v2: planner vs always-full under Zipf
   bench_kernels     — kernel microbench (jnp path)
 
 ``python -m benchmarks.run [--quick]`` prints CSV blocks per bench.
@@ -44,7 +45,7 @@ def main() -> None:
     from benchmarks import (bench_batch, bench_dynamic, bench_frontier,
                             bench_heap_ops, bench_kernels,
                             bench_optimality, bench_p2p, bench_rounds,
-                            bench_throughput)
+                            bench_serve, bench_throughput)
 
     n = 600 if args.quick else 2000
     sizes = (1000, 4000) if args.quick else (2000, 8000, 32000)
@@ -66,6 +67,10 @@ def main() -> None:
             reps=1 if args.quick else 3),
         "frontier": lambda: bench_frontier.run(
             n=400 if args.quick else 2000, reps=1 if args.quick else 3),
+        "serve": lambda: bench_serve.run(
+            n=300 if args.quick else 2000, wave=16 if args.quick else 32,
+            waves_a=2 if args.quick else 4, waves_b=2 if args.quick else 4,
+            waves_c=2 if args.quick else 4, k=4 if args.quick else 8),
         "kernels": bench_kernels.run,
     }
     t_all = time.time()

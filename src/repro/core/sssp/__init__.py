@@ -9,3 +9,7 @@ from repro.core.sssp.solver import (  # noqa: F401
 from repro.core.sssp.dynamic import (  # noqa: F401
     DynamicSolver, GraphDelta, make_delta, make_delta_from_endpoints,
     random_delta)
+from repro.core.sssp.landmarks import (  # noqa: F401
+    LandmarkIndex, ReselectPolicy, seed_lower_bounds, select_landmarks)
+from repro.core.sssp.bidirectional import (  # noqa: F401
+    BidirectionalSolver, BidiResult)

@@ -40,6 +40,8 @@ seeding only ever accelerates fixing when the bounds are valid.
 """
 from __future__ import annotations
 
+import dataclasses
+
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -105,6 +107,34 @@ def select_landmarks(solver, k: int, *, seed: int = 0,
     return np.asarray(lms, np.int32)
 
 
+@dataclasses.dataclass(frozen=True)
+class ReselectPolicy:
+    """When to ACT on :meth:`LandmarkIndex.needs_reselect`.
+
+    The shipped hook is a metric; this is the policy: re-run
+    farthest-point selection on the *drifted* graph when observed seed
+    tightness says the old landmark positions stopped explaining the
+    metric — with cadence and hysteresis so the (k solves) rebuild cost
+    is amortized, never thrashed:
+
+      * ``threshold`` — trigger level for mean ``C0[t]/dist[t]``
+        tightness (below = landmarks drifting).
+      * ``min_observations`` — hysteresis: a reselect resets the
+        tightness accumulator, so at least this many served-query
+        ratios must accumulate again before the trigger can re-arm.
+        (Also guards cold starts: no reselect off a handful of
+        unlucky queries.)
+      * ``cooldown_deltas`` — cadence: at least this many graph deltas
+        must land between reselects (tightness can only have changed
+        because the metric did; re-picking positions on an unchanged
+        graph re-picks the same positions).
+    """
+
+    threshold: float = 0.5
+    min_observations: int = 32
+    cooldown_deltas: int = 1
+
+
 class LandmarkIndex:
     """Landmark distance tables + seeded lower bounds over one graph.
 
@@ -158,6 +188,12 @@ class LandmarkIndex:
         # served queries, fed by SSSPService): the re-selection signal.
         self._tight_sum = 0.0
         self._tight_cnt = 0
+        self._select_seed = int(seed)
+        # re-selection bookkeeping: deltas seen, reselects done, and the
+        # delta count at the last reselect (the cadence clock).
+        self.deltas_applied = 0
+        self.reselects = 0
+        self._deltas_at_reselect = 0
         self.landmarks = select_landmarks(self._fwd, self.k, seed=seed)
         self.refresh()
 
@@ -189,6 +225,27 @@ class LandmarkIndex:
         return self._seed_many(self.d_from, self.d_to,
                                jnp.asarray(sources, jnp.int32))
 
+    def seed_pair(self, source: int, target: int) -> jax.Array | None:
+        """float32[2, n] seeds for a bidirectional (s, t) solve.
+
+        Row 0 lower-bounds ``d(source, ·)`` (the forward lane); row 1
+        lower-bounds ``d(·, target)`` — i.e. distances from ``target``
+        on the REVERSE graph, which is the same triangle-inequality
+        bound with the two tables swapped:
+
+            d(v, t) >= d(v, L) - d(t, L)   (the d(·,L) table as "from")
+            d(v, t) >= d(L, t) - d(L, v)   (the d(L,·) table as "to")
+
+        so the backward seed is ``seed_lower_bounds(d_to, d_from, t)``
+        verbatim.  ``None`` when the tables can't vouch (same contract
+        as :meth:`seed`).
+        """
+        if not self.seed_ok:
+            return None
+        fwd = self._seed_one(self.d_from, self.d_to, jnp.int32(source))
+        bwd = self._seed_one(self.d_to, self.d_from, jnp.int32(target))
+        return jnp.stack([fwd, bwd])
+
     def estimate_pairs(self, pairs) -> np.ndarray | None:
         """float64[B] seeded lower bound ``C0[t]`` per (source, target).
 
@@ -204,11 +261,18 @@ class LandmarkIndex:
             return None
         s = np.asarray([p[0] for p in pairs], np.int64)
         t = np.asarray([p[1] for p in pairs], np.int64)
-        if self._host_tables is None:   # one device pull per refresh,
-            self._host_tables = (       # not per serve wave
+        # one device pull per table generation, not per serve wave.  The
+        # cache is keyed by the IDENTITY of the live device table (not
+        # just cleared in refresh()): any path that swaps d_from/d_to —
+        # refresh, reselect, a future direct assignment — invalidates it
+        # by construction, so a graph-version bump can never leave stale
+        # host tables feeding the planner's estimates.
+        if self._host_tables is None or self._host_tables[0] is not self.d_from:
+            self._host_tables = (
+                self.d_from,
                 np.asarray(self.d_from, np.float64),
                 np.asarray(self.d_to, np.float64))
-        df, dt = self._host_tables      # [k, n] each
+        df, dt = self._host_tables[1:]  # [k, n] each
         with np.errstate(invalid="ignore"):
             fwd = df[:, t] - df[:, s]              # [k, B]
             bwd = dt[:, s] - dt[:, t]
@@ -257,6 +321,53 @@ class LandmarkIndex:
         self._tight_sum = 0.0
         self._tight_cnt = 0
 
+    def reselect(self, *, seed: int | None = None) -> np.ndarray:
+        """Re-run farthest-point selection on the CURRENT (drifted)
+        graph and rebuild both tables.
+
+        The selection solves run on the shared forward
+        :class:`DynamicSolver`, so they are *tracked* — the
+        :meth:`refresh` that follows serves the new forward rows
+        straight from those tracked states (no second solve), and
+        subsequent deltas warm-refresh the new rows like any other
+        tracked source.  Resets the tightness accumulator (the new
+        positions start with a clean signal) and re-enables seeding.
+        Returns the new landmark array.
+        """
+        self.reselects += 1
+        self._deltas_at_reselect = self.deltas_applied
+        # vary the RNG stream per reselect so a tie-heavy graph doesn't
+        # re-pick the exact drifted set out of first-pick luck.
+        sel_seed = (self._select_seed + 7919 * self.reselects
+                    if seed is None else int(seed))
+        self.landmarks = select_landmarks(self._fwd, self.k, seed=sel_seed)
+        self.refresh()
+        self.reset_tightness()
+        return self.landmarks
+
+    def maybe_reselect(self, policy: ReselectPolicy | float) -> bool:
+        """Act on :meth:`needs_reselect` under a :class:`ReselectPolicy`
+        (a bare float is shorthand for ``ReselectPolicy(threshold=f)``).
+
+        Fires — and returns True — only when ALL of: enough tightness
+        observations accumulated since the last reselect (hysteresis:
+        :meth:`reselect` resets the accumulator), the mean is below the
+        threshold, and at least ``cooldown_deltas`` graph deltas landed
+        since the last reselect (cadence: an unchanged metric would
+        re-pick the same positions).
+        """
+        if not isinstance(policy, ReselectPolicy):
+            policy = ReselectPolicy(threshold=float(policy))
+        if self._tight_cnt < policy.min_observations:
+            return False
+        if (self.deltas_applied - self._deltas_at_reselect
+                < policy.cooldown_deltas):
+            return False
+        if not self.needs_reselect(policy.threshold):
+            return False
+        self.reselect()
+        return True
+
     # ------------------------------------------------------------------
     def reverse_delta(self, delta: GraphDelta) -> GraphDelta:
         """The same weight updates, as a delta on the transpose graph."""
@@ -283,6 +394,7 @@ class LandmarkIndex:
         reverse solver's update stats (same counters as
         ``DynamicSolver.update``).
         """
+        self.deltas_applied += 1
         lms = [int(v) for v in self.landmarks]
         want = lms if refresh else []
         rev_stats = self._rev.update(self.reverse_delta(delta), refresh=want)

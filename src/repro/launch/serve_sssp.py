@@ -18,6 +18,13 @@ incremental re-solve and version-stamps the rest of the cache stale.
 ``--landmarks K`` builds a K-landmark index and routes scalar-target
 queries through the goal-directed fast path (seeded lower bounds +
 early-exit targeted solves) instead of full per-source solves.
+
+Query-engine v2: ``--planner`` turns on the cost-based wave planner
+(cache / targeted / bidirectional / full routing per wave),
+``--bidirectional`` attaches the meet-in-the-middle point-to-point
+solver, and ``--reselect-threshold T`` re-selects landmark positions
+when observed seed tightness drops below T.  A ``stats`` line reports
+the planner route counts and ``seed_tightness_mean``.
 """
 from __future__ import annotations
 
@@ -48,6 +55,16 @@ def main() -> None:
     ap.add_argument("--landmarks", type=int, default=0,
                     help="landmark count for the goal-directed fast path "
                          "(0 = full solves, the pre-PR-3 serving path)")
+    ap.add_argument("--planner", action="store_true",
+                    help="cost-based wave planner: route each wave's "
+                         "misses to cache/targeted/bidirectional/full")
+    ap.add_argument("--bidirectional", action="store_true",
+                    help="attach the meet-in-the-middle point-to-point "
+                         "solver (the planner's 'bidirectional' route; "
+                         "without --planner, every scalar-target miss)")
+    ap.add_argument("--reselect-threshold", type=float, default=None,
+                    help="re-select landmark positions when mean seed "
+                         "tightness drops below this (needs --landmarks)")
     args = ap.parse_args()
 
     import numpy as np
@@ -61,7 +78,10 @@ def main() -> None:
 
     service = SSSPService(hg.to_device(), backend=args.backend,
                           batch=args.batch,
-                          landmarks=args.landmarks or None)
+                          landmarks=args.landmarks or None,
+                          planner=args.planner,
+                          bidirectional=args.bidirectional,
+                          reselect=args.reselect_threshold)
     rng = np.random.default_rng(args.seed)
     hot = rng.choice(n, size=min(args.hot_sources, n), replace=False)
     queries = [Query(source=int(rng.choice(hot)),
@@ -99,6 +119,14 @@ def main() -> None:
           f"cache hits: {st['cache_hits']}  deltas: {st['deltas']}")
     print(f"  device solve time: {st['solve_seconds']:.2f}s  "
           f"reachable targets: {reachable}/{answered}")
+    routes = st["planner_routes"]
+    tight = st["seed_tightness_mean"]
+    print(f"stats: routes cache={routes['cache']} "
+          f"targeted={routes['targeted']} "
+          f"bidirectional={routes['bidirectional']} full={routes['full']}  "
+          f"bidi_solves={st['bidi_solves']} reselects={st['reselects']}  "
+          f"seed_tightness_mean="
+          f"{'n/a' if tight is None else f'{tight:.3f}'}")
 
     if args.verify:
         # verify against the CURRENT (post-delta) graph version; only the

@@ -24,6 +24,19 @@ answer later queries only for vertices their ``fixed`` mask certifies
 exact, and they NEVER satisfy a full-vector lookup (``distances()`` /
 ``Query(target=None)``), so a partial entry cannot poison a full one.
 
+Query-engine v2 (``planner=`` / ``bidirectional=`` / ``reselect=``):
+instead of the fixed p2p pipeline, a :class:`WavePlanner` routes each
+wave's misses to the cheapest engine path — full batched solve for
+sources hogging a batch's worth of slots, bidirectional meet-in-the-
+middle solves for the far tail of the landmark estimates, est-sorted
+power-of-two targeted waves for the rest — with an EMA cost model fed
+by observed per-query seconds.  Bidirectional answers land in a
+version-stamped ``(source, target)`` pair cache (their forward lane is
+also admitted ``partial=True``), and a :class:`ReselectPolicy` acts on
+the drift signal: when seed tightness degrades past the threshold the
+landmarks are re-selected on the drifted graph, restoring estimate
+quality instead of just reporting its loss.
+
 This is the amortization story of Kainer & Träff made concrete: the
 engine's per-graph fixed costs (layout, compile) are paid once by the
 Solver, the per-source costs are shared across a batch, the per-query
@@ -39,9 +52,11 @@ from collections import OrderedDict
 
 import numpy as np
 
+from repro.core.sssp.bidirectional import BidirectionalSolver
 from repro.core.sssp.engine import SP4_CONFIG, SSSPConfig, SSSPResult
 from repro.core.sssp.dynamic import DynamicSolver, GraphDelta
-from repro.core.sssp.landmarks import LandmarkIndex
+from repro.core.sssp.landmarks import LandmarkIndex, ReselectPolicy
+from repro.runtime.planner import WavePlan, WavePlanner
 
 
 @dataclasses.dataclass
@@ -84,6 +99,25 @@ class SSSPService:
         (default).  ``False`` defers: stale tables keep seeding only
         while deltas are pure weight increases, and seeding drops after
         the first decrease until the index is refreshed.
+
+    Query-engine v2:
+
+    ``planner``
+        ``True`` (or a pre-built :class:`WavePlanner`) routes each p2p
+        wave's misses through the cost-based planner instead of the
+        fixed targeted pipeline; route counts land in
+        ``stats["planner_routes"]``.
+    ``bidirectional``
+        attach a :class:`BidirectionalSolver` (sharing this service's
+        landmark index for two-lane seeds).  With the planner on it
+        serves the planner's ``bidirectional`` route; without it, every
+        scalar-target miss meets in the middle.
+    ``reselect``
+        a tightness threshold (float) or :class:`ReselectPolicy`: act
+        on landmark drift by re-selecting landmark positions on the
+        mutated graph (checked after every delta and every served
+        wave).  ``None`` keeps re-selection off (metric-only, as
+        before).
     """
 
     def __init__(self, graph, cfg: SSSPConfig = SP4_CONFIG,
@@ -91,7 +125,11 @@ class SSSPService:
                  cache_sources: int = 1024,
                  landmarks: int | LandmarkIndex | None = None,
                  p2p: bool | None = None, refresh_landmarks: bool = True,
-                 landmark_seed: int = 0, **solver_kw):
+                 landmark_seed: int = 0,
+                 planner: bool | WavePlanner | None = None,
+                 bidirectional: bool = False,
+                 reselect: float | ReselectPolicy | None = None,
+                 **solver_kw):
         self.solver = DynamicSolver(graph, cfg, backend, **solver_kw)
         self.batch = int(batch)
         self.cache_sources = max(1, int(cache_sources))
@@ -100,6 +138,10 @@ class SSSPService:
         # entries only answer targets their fixed mask certifies.
         self._cache: OrderedDict[
             int, tuple[int, SSSPResult, bool]] = OrderedDict()
+        # (source, target) -> (version, distance, path): bidirectional
+        # answers, same staleness rule as the source cache.
+        self._pairs: OrderedDict[
+            tuple[int, int], tuple[int, float, list | None]] = OrderedDict()
         self.landmarks: LandmarkIndex | None = None
         if isinstance(landmarks, LandmarkIndex):
             self.landmarks = landmarks
@@ -108,13 +150,37 @@ class SSSPService:
                 self.solver.graph, int(landmarks), cfg=self.solver.cfg,
                 backend=backend if backend != "auto" else "segment",
                 seed=landmark_seed, solver=self.solver)
-        self.p2p = bool(self.landmarks is not None if p2p is None else p2p)
         self.refresh_landmarks = bool(refresh_landmarks)
+        self.planner: WavePlanner | None = None
+        if isinstance(planner, WavePlanner):
+            self.planner = planner
+        elif planner:
+            self.planner = WavePlanner()
+        self._bidi: BidirectionalSolver | None = None
+        if bidirectional:
+            self._bidi = BidirectionalSolver(
+                self.solver.graph, self.solver.cfg,
+                landmarks=self.landmarks)
+        # the v2 routes live on the p2p pipeline: asking for the planner
+        # or the bidirectional solver opts scalar-target queries into it
+        # even without landmarks (targeted waves then run unseeded).
+        self.p2p = bool(self.landmarks is not None
+                        or self.planner is not None
+                        or self._bidi is not None
+                        if p2p is None else p2p)
+        self.reselect_policy: ReselectPolicy | None = None
+        if isinstance(reselect, ReselectPolicy):
+            self.reselect_policy = reselect
+        elif reselect is not None:
+            self.reselect_policy = ReselectPolicy(threshold=float(reselect))
         self.stats = dict(queries=0, batches=0, sources_solved=0,
                           cache_hits=0, solve_seconds=0.0, deltas=0,
                           delta_seconds=0.0, warm_refreshed=0,
                           p2p_solves=0, seed_tightness_mean=None,
-                          seed_tightness_count=0)
+                          seed_tightness_count=0, bidi_solves=0,
+                          reselects=0,
+                          planner_routes=dict(cache=0, targeted=0,
+                                              bidirectional=0, full=0))
 
     # ------------------------------------------------------------------
     @property
@@ -157,6 +223,25 @@ class SSSPService:
         entry = self._cache.get(source)
         return (entry is not None and entry[0] == self.version
                 and not entry[2])
+
+    def _pair_lookup(self, source: int,
+                     target: int) -> tuple[float, list | None] | None:
+        """Fresh bidirectional pair-cache answer, else None."""
+        entry = self._pairs.get((source, target))
+        if entry is None:
+            return None
+        if entry[0] != self.version:
+            del self._pairs[(source, target)]
+            return None
+        self._pairs.move_to_end((source, target))
+        return entry[1], entry[2]
+
+    def _pair_admit(self, source: int, target: int, distance: float,
+                    path: list | None) -> None:
+        self._pairs[(source, target)] = (self.version, distance, path)
+        self._pairs.move_to_end((source, target))
+        while len(self._pairs) > self.cache_sources:
+            self._pairs.popitem(last=False)
 
     def _solve_missing(self, sources: list[int]) -> None:
         """Batch-solve sources not freshly cached, ``self.batch`` at a time."""
@@ -209,6 +294,10 @@ class SSSPService:
             delta, refresh=list(dict.fromkeys(hot + lms)))
         if self.landmarks is not None:
             self.landmarks.apply_delta(delta, refresh=eager_lm)
+        if self._bidi is not None:
+            # both bidi lanes (graph + transpose, and any CSR views)
+            # take the same delta, so its solves stay on this version.
+            self._bidi.apply_delta(delta)
         if hot:
             refreshed = self.solver.resolve(hot)  # tracked: no new solves
             np.asarray(refreshed.dist)
@@ -220,7 +309,24 @@ class SSSPService:
         self.stats["deltas"] += 1
         self.stats["warm_refreshed"] += stats["warm_refreshed"]
         self.stats["sources_solved"] += stats["cold_refreshed"]
+        self._maybe_reselect()
         return stats
+
+    def _maybe_reselect(self) -> bool:
+        """Act on landmark drift under the configured policy (no-op
+        when re-selection is off).  Cached results stay valid — partial
+        entries certify exactness via their ``fixed`` masks regardless
+        of which seeds produced them — so only the seed/estimate tables
+        change hands."""
+        if self.landmarks is None or self.reselect_policy is None:
+            return False
+        if not self.landmarks.maybe_reselect(self.reselect_policy):
+            return False
+        self.stats["reselects"] += 1
+        # mirror the reset accumulator (fresh signal for new positions)
+        self.stats["seed_tightness_mean"] = self.landmarks.tightness()
+        self.stats["seed_tightness_count"] = self.landmarks.tightness_count
+        return True
 
     # ------------------------------------------------------------------
     def serve(self, queries: list[Query]) -> list[Query]:
@@ -247,7 +353,11 @@ class SSSPService:
         if full_q:
             self._serve_full(full_q)
         if tgt_q:
-            self._serve_p2p(tgt_q)
+            if self.planner is not None or self._bidi is not None:
+                self._serve_planned(tgt_q)
+            else:
+                self._serve_p2p(tgt_q)
+        self._maybe_reselect()
         return queries
 
     def _serve_full(self, queries: list[Query]) -> list[Query]:
@@ -316,23 +426,7 @@ class SSSPService:
         solved: dict[tuple[int, int], SSSPResult] = {}
         for at in range(0, len(need), self.batch):
             chunk = need[at: at + self.batch]
-            padded = chunk + [chunk[-1]] * (self.batch - len(chunk))
-            srcs = [s for s, _ in padded]
-            tgts = [t for _, t in padded]
-            t0 = time.perf_counter()
-            C0 = (self.landmarks.seed_batch(srcs)
-                  if self.landmarks is not None else None)
-            batch_res = self.solver.solve_batch(srcs, targets=tgts, C0=C0)
-            np.asarray(batch_res.dist)  # block: count device time honestly
-            self.stats["solve_seconds"] += time.perf_counter() - t0
-            self.stats["batches"] += 1
-            self.stats["p2p_solves"] += len(chunk)
-            for i, (s, t) in enumerate(chunk):
-                res = batch_res[i]
-                solved[(s, t)] = res
-                self._admit(s, res, partial=batch_res.partial)
-            if C0 is not None:
-                self._record_tightness(C0, batch_res, chunk)
+            solved.update(self._targeted_wave(chunk, self.batch))
         paid: set[tuple[int, int]] = set()
         for q in queries:
             res = hits.get(id(q))
@@ -350,6 +444,156 @@ class SSSPService:
             q.distance = float(np.asarray(res.dist[q.target]))
             q.path = (res.path_to(q.target)
                       if np.isfinite(q.distance) else None)
+            q.done = True
+        return queries
+
+    def _targeted_wave(self, chunk: list[tuple[int, int]],
+                       shape: int) -> dict[tuple[int, int], SSSPResult]:
+        """One targeted early-exit solve over ``chunk``, padded to
+        ``shape`` slots; admits partials and feeds the tightness +
+        planner cost telemetry.  Returns per-pair results."""
+        padded = chunk + [chunk[-1]] * (shape - len(chunk))
+        srcs = [s for s, _ in padded]
+        tgts = [t for _, t in padded]
+        t0 = time.perf_counter()
+        C0 = (self.landmarks.seed_batch(srcs)
+              if self.landmarks is not None else None)
+        batch_res = self.solver.solve_batch(srcs, targets=tgts, C0=C0)
+        np.asarray(batch_res.dist)  # block: count device time honestly
+        dt = time.perf_counter() - t0
+        self.stats["solve_seconds"] += dt
+        self.stats["batches"] += 1
+        self.stats["p2p_solves"] += len(chunk)
+        if self.planner is not None:
+            self.planner.observe("targeted", dt, len(chunk))
+        solved: dict[tuple[int, int], SSSPResult] = {}
+        for i, (s, t) in enumerate(chunk):
+            res = batch_res[i]
+            solved[(s, t)] = res
+            self._admit(s, res, partial=batch_res.partial)
+        if C0 is not None:
+            self._record_tightness(C0, batch_res, chunk)
+        return solved
+
+    def _serve_bidi(
+            self, pairs: list[tuple[int, int]], est=None,
+    ) -> dict[tuple[int, int], tuple[float, list | None]]:
+        """Meet-in-the-middle solves for ``pairs``; answers go to the
+        pair cache, each forward lane to the source cache as a partial
+        entry, and estimate/distance ratios into the tightness signal."""
+        out: dict[tuple[int, int], tuple[float, list | None]] = {}
+        if not pairs:
+            return out
+        t0 = time.perf_counter()
+        ratios = []
+        for i, (s, t) in enumerate(pairs):
+            r = self._bidi.solve(s, t)
+            ans = (r.distance,
+                   r.path() if np.isfinite(r.distance) else None)
+            out[(s, t)] = ans
+            self._pair_admit(s, t, ans[0], ans[1])
+            self._admit(s, r.forward_result(), partial=True)
+            if est is not None:
+                e = float(est[i])
+                if np.isfinite(e) and np.isfinite(ans[0]) and ans[0] > 0:
+                    ratios.append(e / ans[0])
+        dt = time.perf_counter() - t0
+        self.stats["solve_seconds"] += dt
+        self.stats["bidi_solves"] += len(pairs)
+        if self.planner is not None:
+            self.planner.observe("bidirectional", dt, len(pairs))
+        if ratios and self.landmarks is not None:
+            self.landmarks.record_tightness(np.asarray(ratios))
+            self.stats["seed_tightness_mean"] = self.landmarks.tightness()
+            self.stats["seed_tightness_count"] = \
+                self.landmarks.tightness_count
+        return out
+
+    def _serve_planned(self, queries: list[Query]) -> list[Query]:
+        """Query-engine v2: plan each wave across the four routes.
+
+        Cache (source entries AND the bidirectional pair cache) is
+        probed first; the misses go through :meth:`WavePlanner.plan` —
+        or all-bidirectional when ``bidirectional=True`` without a
+        planner — and each route's answers are joined wave-locally, so
+        mid-wave eviction can never orphan a query.
+        """
+        self.stats["queries"] += len(queries)
+        routes = self.stats["planner_routes"]
+        hits: dict[int, SSSPResult | tuple[float, list | None]] = {}
+        need: list[tuple[int, int]] = []
+        for q in queries:
+            ans = self._pair_lookup(q.source, q.target)
+            if ans is None:
+                ans = self._lookup(q.source, target=q.target)
+            if ans is not None:
+                hits[id(q)] = ans
+            else:
+                need.append((q.source, q.target))
+        need = list(dict.fromkeys(need))
+        est = (self.landmarks.estimate_pairs(need)
+               if self.landmarks is not None and need else None)
+        if self.planner is not None:
+            plan = self.planner.plan(need, est, batch=self.batch,
+                                     bidi_ok=self._bidi is not None)
+        else:   # bidirectional-only mode: every miss meets in the middle
+            plan = WavePlan(full_sources=[], full_pairs=[],
+                            bidi_pairs=list(need), targeted_waves=[])
+        if plan.full_sources:
+            t0 = time.perf_counter()
+            self._solve_missing(plan.full_sources)
+            if self.planner is not None:
+                self.planner.observe(
+                    "full", time.perf_counter() - t0, len(plan.full_pairs))
+        if plan.bidi_pairs:
+            bidi_est = (None if est is None else
+                        [est[need.index(p)] for p in plan.bidi_pairs])
+            bidi_out = self._serve_bidi(plan.bidi_pairs, bidi_est)
+        else:
+            bidi_out = {}
+        solved: dict[tuple[int, int], SSSPResult] = {}
+        for wave in plan.targeted_waves:
+            shape = WavePlanner.wave_shape(len(wave), self.batch)
+            solved.update(self._targeted_wave(wave, shape))
+        full_keys = set(plan.full_pairs)
+        paid: set[tuple[int, int]] = set()
+        for q in queries:
+            key = (q.source, q.target)
+            ans = hits.get(id(q))
+            if ans is not None:
+                routes["cache"] += 1
+                self.stats["cache_hits"] += 1
+                if isinstance(ans, tuple):
+                    q.distance, q.path = ans
+                else:
+                    q.distance = float(np.asarray(ans.dist[q.target]))
+                    q.path = (ans.path_to(q.target)
+                              if np.isfinite(q.distance) else None)
+                q.done = True
+                continue
+            if key in bidi_out:
+                routes["bidirectional"] += 1
+                q.distance, q.path = bidi_out[key]
+            elif key in full_keys:
+                routes["full"] += 1
+                res = self._lookup(q.source)
+                if res is None:   # evicted mid-wave: re-solve on demand
+                    self._solve_missing([q.source])
+                    res = self._lookup(q.source)
+                q.distance = float(np.asarray(res.dist[q.target]))
+                q.path = (res.path_to(q.target)
+                          if np.isfinite(q.distance) else None)
+            else:
+                routes["targeted"] += 1
+                res = solved[key]
+                q.distance = float(np.asarray(res.dist[q.target]))
+                q.path = (res.path_to(q.target)
+                          if np.isfinite(q.distance) else None)
+            # duplicate pairs in one wave: only the first query pays
+            if key in paid:
+                self.stats["cache_hits"] += 1
+            else:
+                paid.add(key)
             q.done = True
         return queries
 

@@ -29,6 +29,12 @@ Goal-directed point-to-point queries (landmark/ALT seeding + early exit):
     res = solver.solve(s, target=t, C0=index.seed(s))   # early-exits
     res.dist[t]; res.path_to(t)                  # exact on the partial result
 
+Bidirectional point-to-point (meet-in-the-middle, both lanes one
+vmapped program; exact distance + stitched path):
+
+    bidi = sssp.BidirectionalSolver(graph, landmarks=index)
+    r = bidi.solve(s, t)                         # r.distance, r.path()
+
 The legacy entry points ``run_sssp`` / ``run_sssp_ell`` /
 ``run_sssp_distributed`` remain importable here as deprecation shims.
 """
@@ -39,8 +45,10 @@ from repro.core.sssp.backends import Primitives  # noqa: F401
 from repro.core.sssp.dynamic import (  # noqa: F401
     DynamicSolver, GraphDelta, make_delta, make_delta_from_endpoints,
     random_delta)
+from repro.core.sssp.bidirectional import (  # noqa: F401
+    BidirectionalSolver, BidiResult)
 from repro.core.sssp.landmarks import (  # noqa: F401
-    LandmarkIndex, seed_lower_bounds, select_landmarks)
+    LandmarkIndex, ReselectPolicy, seed_lower_bounds, select_landmarks)
 from repro.core.sssp.engine import (  # noqa: F401
     SP1_RULES, SP2_RULES, SP3_RULES, SP3_CONFIG, SP4_CONFIG, SSSPConfig,
     SSSPResult, run_sssp, run_sssp_ell, run_sssp_traced)

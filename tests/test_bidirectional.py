@@ -1,0 +1,167 @@
+"""Bidirectional meet-in-the-middle point-to-point solves.
+
+The acceptance bar: bitwise-exact vs full solves (``dist[t]`` and the
+stitched ``path_to``) on all graph families × {segment, frontier}
+backends, including after weight deltas and landmark re-selection.
+"""
+import numpy as np
+import pytest
+
+from conftest import assert_dist_equal
+from repro.core import generators as gen
+from repro.core.graph import HostGraph
+from repro.core.sssp.bidirectional import BidirectionalSolver
+from repro.core.sssp.landmarks import LandmarkIndex
+from repro.core.sssp.reference import dijkstra
+from repro.sssp import Solver, random_delta
+
+FAMILIES = ["gnp", "dag", "unweighted", "grid", "power_law", "chain",
+            "geometric"]
+
+
+def _graph(family, n=160, seed=11):
+    nn, src, dst, w = gen.make(family, n, seed=seed)
+    return HostGraph(nn, src, dst, w)
+
+
+def _edge_weights(g):
+    e = g.e
+    out = {}
+    for a, b, w in zip(np.asarray(g.src[:e]).tolist(),
+                       np.asarray(g.dst[:e]).tolist(),
+                       np.asarray(g.w[:e], np.float32)):
+        k = (a, b)
+        if k not in out or w < out[k]:
+            out[k] = w
+    return out
+
+
+def _check_pair(bidi, full, hg, s, t, wmap=None):
+    """One (s, t): bitwise distance vs the full solve, valid exact path."""
+    r = bidi.solve(s, t)
+    exp = np.float32(np.asarray(full.dist)[t])
+    if not np.isfinite(exp):
+        assert not np.isfinite(r.distance)
+        assert r.path() is None
+        return r
+    got = np.float32(r.distance)
+    assert got.tobytes() == exp.tobytes(), (s, t, float(got), float(exp))
+    p = r.path()
+    assert p is not None and p[0] == s and p[-1] == t
+    wmap = wmap if wmap is not None else _edge_weights(bidi.graph)
+    acc = np.float32(0.0)
+    for a, b in zip(p, p[1:]):
+        assert (a, b) in wmap, f"stitched path uses non-edge {(a, b)}"
+        acc = np.float32(acc + wmap[(a, b)])
+    assert acc.tobytes() == got.tobytes()
+    return r
+
+
+@pytest.mark.parametrize("family", FAMILIES)
+@pytest.mark.parametrize("backend", ["segment", "frontier"])
+def test_bidi_bitwise_exact_vs_full(family, backend):
+    hg = _graph(family)
+    g = hg.to_device()
+    bidi = BidirectionalSolver(g, backend=backend)
+    solver = Solver(g, backend="segment")
+    s = 3 % hg.n
+    full = solver.solve(s)
+    wmap = _edge_weights(g)
+    for t in (0, s, 7 % hg.n, hg.n // 2, hg.n - 1):
+        r = _check_pair(bidi, full, hg, s, t, wmap)
+        # meet-in-the-middle pays at most the one-directional rounds
+        assert r.rounds <= full.rounds + 1
+    assert bidi.trace_count == 1     # one compile covers every (s, t)
+
+
+@pytest.mark.parametrize("family", FAMILIES)
+def test_bidi_exact_after_deltas_and_reselect(family):
+    hg = _graph(family)
+    g = hg.to_device()
+    index = LandmarkIndex(g, k=4, seed=7)
+    bidi = BidirectionalSolver(g, backend="segment", landmarks=index)
+    for step in range(2):
+        delta = random_delta(bidi.graph, max(1, hg.e // 20),
+                             seed=step, lo=0.2, hi=4.0)
+        bidi.apply_delta(delta)
+        index.apply_delta(delta, refresh=True)
+    from repro.sssp import ReselectPolicy
+    index.record_tightness(np.full(40, 0.01))   # force the drift signal
+    assert index.maybe_reselect(ReselectPolicy(
+        threshold=0.5, min_observations=10, cooldown_deltas=1))
+    assert index.reselects == 1
+    # exactness on the mutated graph, seeded by the re-selected tables
+    full = Solver(bidi.graph, backend="segment")
+    s = 5 % hg.n
+    fres = full.solve(s)
+    wmap = _edge_weights(bidi.graph)
+    for t in (1, hg.n // 3, hg.n - 1):
+        _check_pair(bidi, fres, hg, s, t, wmap)
+    assert bidi.trace_count == 1     # deltas + reselect never retrace
+
+
+def test_bidi_seeds_never_change_answers():
+    hg = _graph("geometric")
+    g = hg.to_device()
+    index = LandmarkIndex(g, k=4, seed=3)
+    plain = BidirectionalSolver(g, backend="segment")
+    seeded = BidirectionalSolver(g, backend="segment", landmarks=index)
+    s, t = 2, hg.n - 3
+    r0, r1 = plain.solve(s, t), seeded.solve(s, t)
+    assert np.float32(r0.distance).tobytes() == \
+        np.float32(r1.distance).tobytes()
+    assert r1.rounds <= r0.rounds    # seeds only ever accelerate
+
+
+def test_bidi_self_and_unreachable():
+    # dag: vertex 0 is the unique zero-in-degree source, so nothing
+    # reaches it but itself
+    hg = _graph("dag", n=60)
+    bidi = BidirectionalSolver(hg.to_device(), backend="segment")
+    r = bidi.solve(4, 4)
+    assert r.distance == 0.0 and r.path() == [4]
+    r = bidi.solve(5, 0)
+    assert not np.isfinite(r.distance)
+    assert r.path() is None and r.meeting is None
+
+
+def test_bidi_forward_lane_is_a_valid_partial_result():
+    hg = _graph("grid")
+    g = hg.to_device()
+    bidi = BidirectionalSolver(g, backend="segment")
+    full = np.asarray(Solver(g, backend="segment").solve(2).dist)
+    r = bidi.solve(2, hg.n - 1)
+    part = r.forward_result()
+    assert part.partial and part.source == 2
+    fixed = np.asarray(part.fixed)
+    # every forward-fixed vertex carries the full solve's exact bits:
+    # lane 0 runs the identical round sequence, and fixing freezes D
+    d = np.asarray(part.dist, np.float32)
+    assert np.array_equal(d[fixed], np.asarray(full, np.float32)[fixed])
+
+
+def test_bidi_matches_dijkstra_sample():
+    hg = _graph("power_law")
+    bidi = BidirectionalSolver(hg.to_device(), backend="segment")
+    rng = np.random.default_rng(0)
+    for s, t in rng.integers(0, hg.n, (4, 2)):
+        ref = dijkstra(hg, source=int(s)).dist[int(t)]
+        got = bidi.solve(int(s), int(t)).distance
+        if np.isinf(ref):
+            assert np.isinf(got)
+        else:
+            assert_dist_equal([got], [ref])
+
+
+def test_bidi_rejects_bad_inputs():
+    hg = _graph("gnp", n=40)
+    g = hg.to_device()
+    with pytest.raises(ValueError):
+        BidirectionalSolver(g, backend="nope")
+    bidi = BidirectionalSolver(g)
+    with pytest.raises(ValueError):
+        bidi.solve(-1, 0)
+    with pytest.raises(ValueError):
+        bidi.solve(0, hg.n)
+    with pytest.raises(ValueError):
+        bidi.solve(0, 1, C0=np.zeros((3, hg.n)))

@@ -1,0 +1,295 @@
+"""Query-engine v2: wave planner, pair/partial cache semantics across
+landmark refresh, estimate cache invalidation, re-selection policy."""
+import numpy as np
+import pytest
+
+from conftest import assert_dist_equal
+from repro.core import generators as gen
+from repro.core.graph import HostGraph
+from repro.core.sssp.landmarks import LandmarkIndex, ReselectPolicy
+from repro.core.sssp.reference import dijkstra
+from repro.runtime.planner import WavePlan, WavePlanner
+from repro.runtime.sssp_service import Query, SSSPService
+from repro.sssp import Solver, random_delta
+
+FAMILIES = ["gnp", "dag", "unweighted", "grid", "power_law", "chain",
+            "geometric"]
+
+
+def _graph(family, n=120, seed=11):
+    nn, src, dst, w = gen.make(family, n, seed=seed)
+    return HostGraph(nn, src, dst, w)
+
+
+# ---------------------------------------------------------------- planner
+def test_planner_full_promotion_single_wave():
+    pl = WavePlanner(full_share=0.5)
+    pairs = [(7, t) for t in range(4)] + [(1, 9), (2, 9)]
+    plan = pl.plan(pairs, batch=8)
+    # source 7 hogs 4 >= 0.5*8 slots -> one full solve; 1 and 2 don't
+    assert plan.full_sources == [7]
+    assert len(plan.full_pairs) == 4
+    assert sum(len(w) for w in plan.targeted_waves) == 2
+
+
+def test_planner_full_promotion_across_waves():
+    # a Zipf-hot source queried a FEW times every wave must still
+    # promote: popularity accumulates across waves with decay
+    pl = WavePlanner(full_share=0.5, pop_decay=0.8)
+    promoted_at = None
+    for wave in range(6):
+        plan = pl.plan([(3, 10 + wave), (3, 40 + wave), (5, 60 + wave)],
+                       batch=8)
+        if 3 in plan.full_sources:
+            promoted_at = wave
+            break
+    assert promoted_at is not None    # 2 + 2*0.8 + 2*0.64 + ... crosses 4
+    assert 5 not in plan.full_sources
+    # promotion consumes the window: the next wave starts cold
+    plan = pl.plan([(3, 99)], batch=8)
+    assert 3 not in plan.full_sources
+
+
+def test_planner_bidi_far_tail_and_cap():
+    pl = WavePlanner(bidi_frac=0.75)
+    pairs = [(i, 50 + i) for i in range(10)]   # unique sources: no promo
+    est = np.array([1.0] * 8 + [100.0, 90.0])
+    plan = pl.plan(pairs, est, batch=2, bidi_ok=True)
+    # only the >= 75%-of-max tail goes bidi, capped at batch (=2)
+    assert sorted(plan.bidi_pairs) == [(8, 58), (9, 59)]
+    assert sum(len(w) for w in plan.targeted_waves) == 8
+    # without bidi_ok the same wave routes everything targeted
+    plan = pl.plan(pairs, est, batch=2)
+    assert plan.bidi_pairs == []
+    assert sum(len(w) for w in plan.targeted_waves) == 10
+
+
+def test_planner_bidi_cost_gate():
+    pl = WavePlanner(margin=1.5)
+    assert pl._bidi_eligible()            # unobserved: explore
+    pl.observe("targeted", 1.0, 10)       # 0.1 s/query
+    pl.observe("bidirectional", 1.0, 1)   # 1.0 s/query > 1.5 * 0.1
+    assert not pl._bidi_eligible()
+    est = np.array([1.0, 100.0])
+    plan = pl.plan([(0, 1), (0, 2)], est, batch=8, bidi_ok=True)
+    assert plan.bidi_pairs == []          # gate closed: far tail stays
+    # cost EMA self-corrects: cheap bidi observations re-open the gate
+    for _ in range(12):
+        pl.observe("bidirectional", 0.1, 1)
+    assert pl._bidi_eligible()
+
+
+def test_planner_observe_ema_and_validation():
+    pl = WavePlanner(ema=0.5)
+    assert pl.cost("targeted") is None
+    pl.observe("targeted", 2.0, 2)        # 1.0 s/query
+    assert pl.cost("targeted") == pytest.approx(1.0)
+    pl.observe("targeted", 1.0, 2)        # 0.5 -> EMA 0.75
+    assert pl.cost("targeted") == pytest.approx(0.75)
+    pl.observe("targeted", 1.0, 0)        # count=0: ignored
+    assert pl.cost("targeted") == pytest.approx(0.75)
+    with pytest.raises(ValueError):
+        pl.observe("warp", 1.0, 1)
+
+
+def test_planner_targeted_waves_sorted_and_shaped():
+    pl = WavePlanner()
+    pairs = [(i, i + 50) for i in range(5)]
+    est = np.array([9.0, 1.0, 5.0, 3.0, 7.0])
+    plan = pl.plan(pairs, est, batch=4)
+    flat = [p for w in plan.targeted_waves for p in w]
+    assert flat == [pairs[1], pairs[3], pairs[2], pairs[4], pairs[0]]
+    assert [len(w) for w in plan.targeted_waves] == [4, 1]
+    assert WavePlanner.wave_shape(1, 8) == 1
+    assert WavePlanner.wave_shape(3, 8) == 4
+    assert WavePlanner.wave_shape(5, 8) == 8
+    assert WavePlanner.wave_shape(9, 8) == 8   # never above batch
+
+
+def test_wave_plan_route_counts():
+    plan = WavePlan(full_sources=[1], full_pairs=[(1, 2), (1, 3)],
+                    bidi_pairs=[(4, 5)],
+                    targeted_waves=[[(6, 7)], [(8, 9), (10, 11)]])
+    assert plan.route_counts() == {
+        "full": 2, "bidirectional": 1, "targeted": 3}
+
+
+# ------------------------------------------- estimate cache invalidation
+def test_estimate_pairs_cache_tracks_table_refresh():
+    """Regression: the host-side table cache must invalidate whenever
+    the device tables are swapped (refresh, reselect), never serve the
+    planner estimates computed from a previous graph version."""
+    hg = _graph("geometric")
+    g = hg.to_device()
+    index = LandmarkIndex(g, k=4, seed=3)
+    pairs = [(2, hg.n - 3), (5, hg.n // 2), (0, 17)]
+    before = index.estimate_pairs(pairs)
+    again = index.estimate_pairs(pairs)         # cached path, same tables
+    np.testing.assert_array_equal(before, again)
+    # heavy regional delta -> refreshed tables -> estimates MUST move
+    delta = random_delta(g, max(1, hg.e // 3), seed=0, lo=30.0, hi=60.0)
+    index.apply_delta(delta, refresh=True)
+    after = index.estimate_pairs(pairs)
+    assert not np.array_equal(before, after)
+    # and each estimate is still a valid lower bound on the new metric
+    solver = Solver(index._fwd.graph, backend="segment")
+    for (s, t), e in zip(pairs, after):
+        d = float(np.asarray(solver.solve(s).dist)[t])
+        assert e <= d + 1e-3 * max(1.0, abs(d))
+    # reselect swaps tables too: cache must follow (identity-keyed)
+    index.record_tightness(np.full(64, 0.01))
+    assert index.maybe_reselect(ReselectPolicy(threshold=0.5,
+                                               min_observations=32,
+                                               cooldown_deltas=1))
+    post = index.estimate_pairs(pairs)
+    for (s, t), e in zip(pairs, post):
+        d = float(np.asarray(solver.solve(s).dist)[t])
+        assert e <= d + 1e-3 * max(1.0, abs(d))
+
+
+# ---------------------------------------------------- reselection policy
+def test_reselect_policy_hysteresis_and_cadence():
+    hg = _graph("grid")
+    g = hg.to_device()
+    index = LandmarkIndex(g, k=3, seed=1)
+    pol = ReselectPolicy(threshold=0.5, min_observations=8,
+                         cooldown_deltas=1)
+    # no observations -> never fires
+    assert not index.maybe_reselect(pol)
+    # few observations -> hysteresis holds even at terrible tightness
+    index.record_tightness(np.full(4, 0.01))
+    assert not index.maybe_reselect(pol)
+    # enough observations but zero deltas since init -> cadence holds
+    index.record_tightness(np.full(8, 0.01))
+    assert not index.maybe_reselect(pol)
+    delta = random_delta(g, 4, seed=0, lo=0.5, hi=2.0)
+    index.apply_delta(delta, refresh=True)
+    assert index.maybe_reselect(pol)
+    assert index.reselects == 1
+    assert index.tightness_count == 0          # accumulator reset
+    # tight seeds never trigger, whatever the counters say
+    index.record_tightness(np.full(32, 0.99))
+    index.apply_delta(random_delta(g, 4, seed=1, lo=0.5, hi=2.0),
+                      refresh=True)
+    assert not index.maybe_reselect(pol)
+
+
+# --------------------------------- partial/pair caches across refreshes
+@pytest.mark.parametrize("family", FAMILIES)
+def test_partial_cache_exact_across_landmark_refresh(family):
+    """Satellite: cached partial/pair results must stay bitwise-equal to
+    cold full solves across a landmark refresh AND a re-selection —
+    the fixed masks certify exactness independent of which seeds
+    produced the entries."""
+    hg = _graph(family)
+    g = hg.to_device()
+    svc = SSSPService(g, batch=4, landmarks=3, landmark_seed=5,
+                      planner=True, bidirectional=True)
+    rng = np.random.default_rng(2)
+    qs = [Query(int(s), int(t)) for s, t in rng.integers(0, hg.n, (8, 2))]
+    svc.serve(qs)
+    cold_solver = Solver(g, backend="segment")
+    cold = {}
+
+    def check(tag):
+        for q in qs:
+            rq = Query(q.source, q.target)
+            svc.serve([rq])
+            if q.source not in cold:
+                cold[q.source] = np.asarray(
+                    cold_solver.solve(q.source).dist, np.float32)
+            exp = cold[q.source][q.target]
+            if not np.isfinite(exp):
+                assert rq.distance is not None
+                assert not np.isfinite(rq.distance), (tag, q)
+                continue
+            got = np.float32(rq.distance)
+            assert got.tobytes() == exp.tobytes(), (tag, q, got, exp)
+            assert rq.path[0] == q.source and rq.path[-1] == q.target
+
+    check("fresh")
+    svc.landmarks.refresh()                      # table rebuild, same graph
+    check("after refresh")
+    svc.landmarks.reselect()                     # new positions, same graph
+    check("after reselect")
+    # cache really answered the re-queries (no new solves per repeat)
+    assert svc.stats["cache_hits"] > 0
+
+
+def test_pair_cache_versioned_and_partial_never_poisons_full():
+    hg = _graph("geometric")
+    g = hg.to_device()
+    svc = SSSPService(g, batch=4, landmarks=3, bidirectional=True)
+    s, t = 2, hg.n - 3
+    svc.serve([Query(s, t)])                     # bidi miss -> pair cache
+    assert svc.stats["bidi_solves"] == 1
+    svc.serve([Query(s, t)])                     # pair-cache hit
+    assert svc.stats["bidi_solves"] == 1
+    assert svc.stats["planner_routes"]["cache"] == 1
+    # a full-vector request must NOT be satisfied by the partial entry
+    d = svc.distances(s)
+    assert_dist_equal(d, dijkstra(hg, source=s).dist)
+    # a delta stamps every pair entry stale: next probe re-solves
+    # (refresh_hot=0: otherwise the warm refresh re-admits the full
+    # entry for s fresh and the probe legitimately answers from it)
+    delta = random_delta(g, 4, seed=3, lo=0.5, hi=2.0)
+    svc.apply_delta(delta, refresh_hot=0)
+    q = Query(s, t)
+    svc.serve([q])
+    assert svc.stats["bidi_solves"] == 2
+    mg = svc.solver.graph
+    e = mg.e
+    ref = dijkstra(HostGraph(hg.n, np.asarray(mg.src[:e]),
+                             np.asarray(mg.dst[:e]),
+                             np.asarray(mg.w[:e])),
+                   source=s).dist[t]
+    if np.isinf(ref):
+        assert not np.isfinite(q.distance)
+    else:
+        assert_dist_equal([q.distance], [ref])
+
+
+# --------------------------------------------------- planned end-to-end
+def test_planned_service_matches_dijkstra_with_route_accounting():
+    hg = _graph("geometric", n=150)
+    g = hg.to_device()
+    svc = SSSPService(g, batch=4, landmarks=4, landmark_seed=0,
+                      planner=True, bidirectional=True)
+    rng = np.random.default_rng(7)
+    # skewed stream: a hot source plus random tails, three waves
+    total = 0
+    for wave in range(3):
+        pairs = [(9, int(t)) for t in rng.integers(0, hg.n, 3)]
+        pairs += [(int(s), int(t))
+                  for s, t in rng.integers(0, hg.n, (5, 2))]
+        qs = [Query(s, t) for s, t in pairs]
+        svc.serve(qs)
+        total += len(qs)
+        for q in qs:
+            assert q.done
+            ref = dijkstra(hg, source=q.source).dist[q.target]
+            if np.isinf(ref):
+                assert not np.isfinite(q.distance)
+            else:
+                assert_dist_equal([q.distance], [ref])
+    routes = svc.stats["planner_routes"]
+    assert sum(routes.values()) == total == svc.stats["queries"]
+    assert routes["full"] > 0        # the hot source promoted
+    assert routes["targeted"] > 0
+
+
+def test_service_reselect_wiring():
+    hg = _graph("geometric")
+    g = hg.to_device()
+    svc = SSSPService(g, batch=4, landmarks=3, reselect=ReselectPolicy(
+        threshold=0.5, min_observations=4, cooldown_deltas=1))
+    # force the drift signal, then a delta satisfies the cadence and the
+    # service-level hook fires on apply_delta
+    svc.landmarks.record_tightness(np.full(8, 0.01))
+    delta = random_delta(g, 4, seed=0, lo=0.5, hi=2.0)
+    svc.apply_delta(delta)
+    assert svc.stats["reselects"] == 1
+    assert svc.landmarks.reselects == 1
+    # float shorthand builds a policy
+    svc2 = SSSPService(g, batch=4, landmarks=3, reselect=0.5)
+    assert svc2.reselect_policy.threshold == 0.5
