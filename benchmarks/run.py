@@ -10,6 +10,8 @@
   bench_p2p         — goal-directed point-to-point vs full solves (ALT)
   bench_frontier    — sparse-frontier rounds vs dense (edges relaxed)
   bench_serve       — query-engine v2: planner vs always-full under Zipf
+  bench_fleet       — many-graph congestion replay: fleet vs per-graph
+                      loop, chaos (dropout/straggler) live
   bench_kernels     — kernel microbench (jnp path)
 
 ``python -m benchmarks.run [--quick]`` prints CSV blocks per bench.
@@ -42,8 +44,8 @@ def main() -> None:
     ap.add_argument("--only", default=None)
     args = ap.parse_args()
 
-    from benchmarks import (bench_batch, bench_dynamic, bench_frontier,
-                            bench_heap_ops, bench_kernels,
+    from benchmarks import (bench_batch, bench_dynamic, bench_fleet,
+                            bench_frontier, bench_heap_ops, bench_kernels,
                             bench_optimality, bench_p2p, bench_rounds,
                             bench_serve, bench_throughput)
 
@@ -71,6 +73,10 @@ def main() -> None:
             n=300 if args.quick else 2000, wave=16 if args.quick else 32,
             waves_a=2 if args.quick else 4, waves_b=2 if args.quick else 4,
             waves_c=2 if args.quick else 4, k=4 if args.quick else 8),
+        "fleet": lambda: bench_fleet.run(
+            fleet=8 if args.quick else 64, n=120 if args.quick else 200,
+            ticks=4 if args.quick else 10,
+            queries_per_tick=2 if args.quick else 32),
         "kernels": bench_kernels.run,
     }
     t_all = time.time()

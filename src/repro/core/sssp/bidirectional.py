@@ -57,7 +57,8 @@ import numpy as np
 from repro.core.graph import CsrGraph, Graph, HostGraph, INF
 from repro.core.sssp import backends
 from repro.core.sssp.engine import (SP4_CONFIG, SSSPConfig, SSSPResult,
-                                    _fixed_by_dict, _init_state, _round)
+                                    _fixed_by_dict, _init_state, _round,
+                                    _solve_warm, delta_taint_seeds)
 from repro.core.sssp.solver import _frontier_fits, _next_pow2
 
 BIDI_BACKENDS = ("auto", "segment", "frontier")
@@ -170,6 +171,22 @@ class BidirectionalSolver:
     side goes through the precomputed forward→reverse edge permutation,
     the same remap ``LandmarkIndex`` uses.  Solves never retrace across
     versions: the stacked graph is a traced operand.
+
+    ``update(delta, warm=[...])`` additionally re-solves hot ``(s, t)``
+    pairs WARM from their cached two-lane state — the pair-cache mirror
+    of ``DynamicSolver``'s hot-source refresh.  Each pair's stacked
+    ``[2, n]`` D/fixed arrays re-enter the engine through the same
+    taint-cone warm start (``delta_taint_seeds`` + ``_solve_warm``),
+    both lanes in one vmapped program.  Warm-starting from a PARTIAL
+    (early-stopped) lane is exact: every finite ``D0[v]`` was achieved
+    by some relaxation path whose steps are tight in D0, so if that
+    path used an increased edge the taint sweep walks the same tight
+    chain and resets ``v`` — stale-low bounds cannot survive.  The warm
+    re-solve then runs each lane to its FULL fixpoint (the standard
+    cond, not the bidirectional cut), so the refreshed forward lane is
+    a complete distance vector and the re-folded pair distance is
+    bitwise what a cold solve on the new graph returns (property-tested
+    in ``tests/test_fleet.py``).
     """
 
     def __init__(self, graph, cfg: SSSPConfig = SP4_CONFIG,
@@ -201,7 +218,9 @@ class BidirectionalSolver:
         self.backend = backend
         self.landmarks = landmarks
         self.trace_count = 0
+        self.warm_trace_count = 0
         self.solves = 0
+        self.warm_solves = 0
 
         # forward edge i (dst-sorted) -> its row in the reverse graph's
         # dst-sorted list (same derivation as LandmarkIndex.reverse_delta)
@@ -260,6 +279,26 @@ class BidirectionalSolver:
 
         self._jit = jax.jit(program)
 
+        def warm_program(g2_old, g2_new, delta2, D0, F0):
+            # both lanes of one cached pair warm re-solve to their full
+            # fixpoints; dense segment prims — warm refresh is a batched
+            # path, same routing as DynamicSolver's (bitwise-identical
+            # rounds either way).
+            self.warm_trace_count += 1
+
+            def one(g_old, g_new, d, D0l, f0l):
+                seeds, pure = delta_taint_seeds(g_old, d, D0l)
+                st, _, _ = _solve_warm(
+                    g_new, cfg, D0l, f0l, seeds, pure,
+                    prims=backends.segment_prims(g_new))
+                return st
+
+            st = jax.vmap(one)(g2_old, g2_new, delta2, D0, F0)
+            score = st.D[0] + st.D[1]
+            return st, jnp.min(score), jnp.argmin(score)
+
+        self._jit_warm = jax.jit(warm_program)
+
     # ------------------------------------------------------------------
     def _restack(self) -> None:
         self._g2 = _stack2(self.graph, self.rgraph)
@@ -274,12 +313,30 @@ class BidirectionalSolver:
         one ``LandmarkIndex.reverse_delta`` already built to avoid
         computing it twice.
         """
+        self.update(delta, rdelta)
+
+    def update(self, delta, rdelta=None, *,
+               warm=None) -> dict[tuple[int, int], BidiResult]:
+        """Apply a delta and warm re-solve hot cached pairs.
+
+        ``warm`` is a list of ``(source, target, D, fixed)`` — each
+        pair's two-lane ``[2, n]`` state exactly as a pre-delta
+        :class:`BidiResult` carried it.  Both lanes re-enter the engine
+        through the taint-cone warm start against the OLD stacked graph
+        (taint is judged on the weights the state was computed with)
+        and run to their full fixpoints on the new one, one vmapped
+        program for the pair (one trace for all pairs and all future
+        deltas).  Returns ``{(s, t): fresh BidiResult}`` with the exact
+        re-folded distance; the stitched path comes from the refreshed
+        parent structure as usual.
+        """
         if rdelta is None:
             from repro.core.sssp.dynamic import make_delta
             kk = delta.k
             idx = np.asarray(delta.edge_idx)[:kk]
             rdelta = make_delta(self.rgraph, self._rev_perm[idx],
                                 np.asarray(delta.new_w)[:kk])
+        g2_old = self._g2
         self.graph = self.graph.apply_delta(delta)
         self.rgraph = self.rgraph.apply_delta(rdelta)
         if self._csr_f is not None:
@@ -287,6 +344,32 @@ class BidirectionalSolver:
             self._csr_b = self._csr_b.apply_delta(rdelta)
         self._wmap = None
         self._restack()
+        out: dict[tuple[int, int], BidiResult] = {}
+        if not warm:
+            return out
+        # forward + reverse updates stack like the graphs do (same k →
+        # same k_pad, both built by make_delta → same treedef)
+        delta2 = _stack2(delta, rdelta)
+        for source, target, D0, F0 in warm:
+            final, mu, meet = self._jit_warm(
+                g2_old, self._g2, delta2,
+                jnp.asarray(D0, jnp.float32), jnp.asarray(F0, bool))
+            self.warm_solves += 1
+            dist = float(mu)
+            fb = np.asarray(final.fixed_by).sum(axis=0)
+            res = BidiResult(
+                source=int(source), target=int(target), distance=dist,
+                meeting=int(meet) if np.isfinite(dist) else None,
+                rounds=int(final.round[0]),
+                D=final.D, C=final.C, fixed=final.fixed,
+                fixed_by=_fixed_by_dict(fb),
+                graph=self.graph, rgraph=self.rgraph, mu=dist)
+            if np.isfinite(dist):
+                p = res.path()
+                if p is not None:
+                    res.distance = float(self._refold(p))
+            out[(int(source), int(target))] = res
+        return out
 
     def _refold(self, path) -> np.float32:
         """Fold the path's weights left-to-right in float32.

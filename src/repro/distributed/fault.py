@@ -82,6 +82,47 @@ def elastic_data_axis(n_hosts_alive: int, chips_per_host: int,
     return data, model_parallel
 
 
+class DeviceDropout(RuntimeError):
+    """Injected device loss: the tick's device state is gone; the driver
+    must restore the last checkpoint and replay."""
+
+    def __init__(self, tick: int, member: int):
+        super().__init__(f"injected device dropout at tick {tick} "
+                         f"(fleet member {member})")
+        self.tick = tick
+        self.member = member
+
+
+class FaultInjector:
+    """Deterministic chaos schedule for replay drivers.
+
+    ``schedule`` maps tick -> ("dropout", member) or
+    ("straggler", delay_ms).  ``poll(tick)`` returns the event due at
+    that tick — ONCE.  Consume-once semantics matter because a dropout
+    makes the driver restore a checkpoint and re-run the tick: without
+    the ``fired`` set the same event would re-fire forever.  Replayed
+    ticks after a restore therefore run clean, which is exactly the
+    recovery contract (the re-run is the "restored device").
+    """
+
+    def __init__(self, schedule: dict[int, tuple[str, int]] | None = None):
+        self.schedule = dict(schedule or {})
+        for t, ev in self.schedule.items():
+            if ev[0] not in ("dropout", "straggler"):
+                raise ValueError(f"unknown fault kind {ev[0]!r} at tick {t}")
+        self.fired: set[int] = set()
+        self.events: list[tuple[int, str, int]] = []   # audit log
+
+    def poll(self, tick: int) -> tuple[str, int] | None:
+        """The fault due at ``tick``, or None; each tick fires once."""
+        if tick in self.fired or tick not in self.schedule:
+            return None
+        self.fired.add(tick)
+        ev = self.schedule[tick]
+        self.events.append((tick, ev[0], ev[1]))
+        return ev
+
+
 class StepTimer:
     """Per-host rolling step timer feeding detect_stragglers."""
 

@@ -1,0 +1,288 @@
+"""Congestion replay over a graph fleet, with chaos hooks.
+
+The fleet's production scenario: F same-shape road networks, each with
+its own rush hour.  Every tick each member gets a REGIONAL weight-drift
+delta (a contiguous window of source vertices, multiplicative scales
+mixing increases and decreases — the same drift shape ``bench_serve``
+replays on one graph), all F deltas stack into ONE device dispatch
+(:func:`repro.core.sssp.fleet.stack_deltas` → ``FleetSolver.update``),
+and the fleet's tracked home solves warm-refresh through the shared
+while_loop.  Query traffic rides on top through per-graph
+``SSSPService``-style version-stamped source caches: hits answer from
+cached distance vectors, the tick's misses across ALL members assemble
+into one ``[F, B]`` ``solve_batch``.
+
+Chaos comes from :class:`repro.distributed.fault.FaultInjector`:
+
+* ``("dropout", member)`` — the device state is declared lost
+  mid-replay.  The driver restores the last checkpoint (fleet weights +
+  tracked solves, via :class:`~repro.checkpoint.manager.CheckpointManager`
+  on disk or an in-memory device_get snapshot), clears the per-graph
+  caches (their version stamps would otherwise alias the rolled-back
+  solver version), and REPLAYS the dropped ticks.  Tick work is a
+  deterministic function of ``(seed, tick, member)`` — the RNG is
+  re-derived per tick, never carried — so the replayed ticks regenerate
+  the identical deltas and the run ends bitwise-equal to a fault-free
+  run (property-tested in ``tests/test_fleet.py``).
+* ``("straggler", delay_ms)`` — one virtual host stalls for a tick; the
+  stall feeds that host's :class:`~repro.distributed.fault.StepTimer`
+  and ``detect_stragglers`` flags it (z-score outlier), exercising the
+  blacklist path without changing any computed state.
+"""
+from __future__ import annotations
+
+import time
+from collections import OrderedDict
+
+import jax
+import numpy as np
+
+from repro.core.sssp.dynamic import make_delta
+from repro.core.sssp.fleet import FleetSolver, GraphFleet, stack_deltas
+from repro.distributed.fault import FaultInjector, StepTimer, detect_stragglers
+
+
+def regional_drift(src: np.ndarray, w_row: np.ndarray, n: int, *,
+                   seed: int, tick: int, member: int, region: int,
+                   drift_edges: int) -> tuple[np.ndarray, np.ndarray]:
+    """One member's tick-``tick`` drift: ``(edge_idx, new_w)``.
+
+    Deterministic in ``(seed, tick, member)`` — module-level so the
+    sequential baseline in ``benchmarks/bench_fleet.py`` can replay the
+    EXACT same per-graph work the fleet driver does.
+    """
+    rng = np.random.default_rng((seed, tick, member))
+    lo = int(rng.integers(0, n))
+    idx = np.nonzero((src >= lo) & (src < lo + region))[0]
+    if len(idx) > drift_edges:
+        idx = rng.choice(idx, drift_edges, replace=False)
+    if len(idx) == 0:                          # window missed all edges
+        idx = rng.integers(0, len(src), size=1)
+    idx = np.sort(idx).astype(np.int64)
+    scale = rng.uniform(0.5, 2.5, size=len(idx)).astype(np.float32)
+    return idx, np.clip(w_row[idx] * scale, 1e-3, 1e6)
+
+
+def query_stream(n: int, hot: np.ndarray, *, seed: int, tick: int,
+                 member: int, count: int,
+                 hot_frac: float) -> list[tuple[int, int]]:
+    """One member's tick-``tick`` ``(s, t)`` queries (Zipf-ish reuse:
+    sources revisit a small hot set).  Deterministic, like the drift."""
+    rng = np.random.default_rng((seed, tick, member, 7))
+    out = []
+    for _ in range(count):
+        s = (int(rng.choice(hot)) if rng.random() < hot_frac
+             else int(rng.integers(0, n)))
+        out.append((s, int(rng.integers(0, n))))
+    return out
+
+
+class CongestionReplay:
+    """Tick-driven drift + query traffic + chaos over one fleet.
+
+    Parameters
+    ----------
+    solver: FleetSolver (or a GraphFleet / list of Graphs to wrap).
+    seed: base of the per-tick RNG streams (``(seed, tick, member)``).
+    drift_edges: max edges drifted per member per tick.
+    region_frac: width of the drifting source-vertex window, as a
+        fraction of n (rush hour is spatially local).
+    queries_per_tick: (s, t) queries per member per tick.
+    hot_frac: probability a query source comes from the member's small
+        hot set (Zipf-ish reuse → cache hits).
+    cache_size: per-member source-cache LRU capacity.
+    fault: FaultInjector (or a plain ``{tick: (kind, arg)}`` schedule).
+    manager: CheckpointManager for on-disk fleet checkpoints; None
+        keeps a single in-memory snapshot (enough for dropout replay).
+    ckpt_every: checkpoint cadence in ticks.
+    """
+
+    def __init__(self, solver, *, seed: int = 0, drift_edges: int = 16,
+                 region_frac: float = 0.125, queries_per_tick: int = 8,
+                 hot_frac: float = 0.5, cache_size: int = 32,
+                 fault=None, manager=None, ckpt_every: int = 4,
+                 straggler_z: float = 3.0):
+        if not isinstance(solver, FleetSolver):
+            solver = FleetSolver(solver if isinstance(solver, GraphFleet)
+                                 else GraphFleet.stack(solver))
+        self.solver = solver
+        self.fleet = solver.fleet
+        self.seed = int(seed)
+        self.drift_edges = int(drift_edges)
+        self.region = max(1, int(region_frac * self.fleet.n))
+        self.queries_per_tick = int(queries_per_tick)
+        self.hot_frac = float(hot_frac)
+        self.cache_size = int(cache_size)
+        if fault is not None and not isinstance(fault, FaultInjector):
+            fault = FaultInjector(fault)
+        self.fault = fault
+        self.manager = manager
+        self.ckpt_every = max(1, int(ckpt_every))
+        # max attainable z-score over F hosts is (F-1)/sqrt(F) — small
+        # fleets need a lower bar for the straggler path to be testable.
+        self.straggler_z = float(straggler_z)
+
+        F = self.fleet.size
+        # member topologies are FIXED across the replay — build them once
+        # so make_delta sees stable arrays (CSR-perm cache stays hot) and
+        # keep a host weight mirror so drift never reads the device.
+        self.members = self.fleet.members()
+        self._src = [np.asarray(m.src)[:m.e] for m in self.members]
+        self._w = np.asarray(self.fleet.g.w).copy()          # [F, e_pad]
+        self._hot = [np.arange(m * 3 % self.fleet.n,
+                               m * 3 % self.fleet.n + 8) % self.fleet.n
+                     for m in range(F)]
+        self._caches: list[OrderedDict] = [OrderedDict() for _ in range(F)]
+        self._timers = {f"host{m}": StepTimer() for m in range(F)}
+        self._snap = None            # in-memory (tick, host_state) fallback
+        self.tick = 0
+        self.stats = dict(ticks=0, solves=0, warm_refreshes=0, queries=0,
+                          cache_hits=0, fleet_dispatches=0, drift_edges=0,
+                          restarts=0, chaos_events=0, stragglers_flagged=0,
+                          straggler_sleep_s=0.0, drift_s=0.0, query_s=0.0)
+
+        homes = np.arange(F, dtype=np.int32) % self.fleet.n
+        self.solver.solve(homes)     # tracked state the drift warm-refreshes
+        self.stats["solves"] += F
+        self._checkpoint()           # tick -1 baseline: dropout-before-first-
+                                     # checkpoint restores to here
+
+    # -- checkpoint / restore -----------------------------------------
+    def _state(self) -> dict:
+        state = dict(self.solver.state_dict())
+        state["tick"] = np.int32(self.tick)
+        return state
+
+    def _checkpoint(self) -> None:
+        state = self._state()
+        if self.manager is not None:
+            self.manager.save(self.tick + 1, state, blocking=True)
+        else:
+            self._snap = jax.device_get(state)
+
+    def _restore(self) -> None:
+        if self.manager is not None:
+            _, state = self.manager.restore_latest(self._state())
+        else:
+            state = self._snap
+        assert state is not None, "no checkpoint to restore"
+        self.solver.load_state_dict(state)
+        self.fleet = self.solver.fleet
+        self._w = np.asarray(state["w"]).copy()
+        self.tick = int(state["tick"])
+        # version rolled back → stamped entries would alias fresh ones
+        for c in self._caches:
+            c.clear()
+        self.stats["restarts"] += 1
+
+    # -- one tick ------------------------------------------------------
+    def _drift_deltas(self, tick: int):
+        """Per-member regional drift, re-derived from (seed, tick, m)."""
+        deltas, touched = [], 0
+        for m in range(self.fleet.size):
+            idx, new_w = regional_drift(
+                self._src[m], self._w[m], self.fleet.n, seed=self.seed,
+                tick=tick, member=m, region=self.region,
+                drift_edges=self.drift_edges)
+            self._w[m, idx] = new_w
+            touched += len(idx)
+            deltas.append(make_delta(self.members[m], idx, new_w))
+        return stack_deltas(deltas), touched
+
+    def _serve_queries(self, tick: int) -> None:
+        F, n = self.fleet.size, self.fleet.n
+        pairs, misses = [], [[] for _ in range(F)]
+        for m in range(F):
+            for s, t in query_stream(n, self._hot[m], seed=self.seed,
+                                     tick=tick, member=m,
+                                     count=self.queries_per_tick,
+                                     hot_frac=self.hot_frac):
+                pairs.append((m, s, t))
+        self.stats["queries"] += len(pairs)
+        version = self.solver.version
+        for m, s, _t in pairs:
+            hit = self._caches[m].get(s)
+            if hit is not None and hit[0] == version:
+                self._caches[m].move_to_end(s)
+            elif s not in misses[m]:
+                misses[m].append(s)
+        # everything beyond the unique misses is answered from cache —
+        # same-tick duplicates (the Zipf hot head) amortize one lane.
+        self.stats["cache_hits"] += len(pairs) - sum(map(len, misses))
+        width = max(len(ms) for ms in misses)
+        if width == 0:
+            return
+        batch = np.zeros((F, width), np.int32)
+        for m, ms in enumerate(misses):
+            row = ms + [ms[-1] if ms else 0] * (width - len(ms))
+            batch[m] = row if ms else 0
+        res = self.solver.solve_batch(batch)
+        self.stats["solves"] += F * width
+        self.stats["fleet_dispatches"] += 1
+        dist = np.asarray(res.dist)
+        for m, ms in enumerate(misses):
+            for i, s in enumerate(ms):
+                self._caches[m][s] = (version, dist[m, i])
+                self._caches[m].move_to_end(s)
+                while len(self._caches[m]) > self.cache_size:
+                    self._caches[m].popitem(last=False)
+
+    def step(self) -> None:
+        """One tick: drift every member, warm-refresh, serve queries."""
+        tick = self.tick
+        t0 = time.perf_counter()
+        stacked, touched = self._drift_deltas(tick)
+        up = self.solver.update(stacked)
+        self.fleet = self.solver.fleet
+        self.stats["drift_edges"] += touched
+        self.stats["warm_refreshes"] += up["warm_refreshed"]
+        self.stats["fleet_dispatches"] += 1
+        t1 = time.perf_counter()
+        self.stats["drift_s"] += t1 - t0
+        self._serve_queries(tick)
+        self.stats["query_s"] += time.perf_counter() - t1
+        self.tick = tick + 1
+        self.stats["ticks"] += 1
+        if self.tick % self.ckpt_every == 0:
+            self._checkpoint()
+
+    # -- driver --------------------------------------------------------
+    def run(self, ticks: int) -> dict:
+        """Replay up to tick ``ticks``, weaving in the fault schedule."""
+        flagged: set[str] = set()
+        while self.tick < ticks:
+            ev = self.fault.poll(self.tick) if self.fault else None
+            if ev is not None:
+                self.stats["chaos_events"] += 1
+                if ev[0] == "dropout":
+                    # device state lost mid-replay: roll back, replay the
+                    # dropped ticks (poll is consume-once → no re-fire).
+                    self._restore()
+                    continue
+                delay = ev[1] / 1000.0
+                time.sleep(delay)
+                self.stats["straggler_sleep_s"] += delay
+                slow = f"host{self.tick % self.fleet.size}"
+            else:
+                delay, slow = 0.0, None
+            t0 = time.perf_counter()
+            self.step()
+            dt = time.perf_counter() - t0
+            for name, timer in self._timers.items():
+                # the stall stretches ONLY the slow host's step
+                timer.times.append(dt + (delay if name == slow else 0.0))
+                timer.times = timer.times[-timer.window:]
+            flagged |= set(detect_stragglers(
+                {h: t.times for h, t in self._timers.items()},
+                z_threshold=self.straggler_z, min_steps=3))
+        self.stats["stragglers_flagged"] = len(flagged)
+        return dict(self.stats)
+
+    # -- inspection ----------------------------------------------------
+    def distances(self) -> np.ndarray:
+        """Tracked home-source distances, ``[F, n]`` (bitwise stable
+        across dropout/restore — the restart property test's witness)."""
+        return np.asarray(self.solver.resolve().dist)
+
+    def weights(self) -> np.ndarray:
+        return np.asarray(self.fleet.g.w)

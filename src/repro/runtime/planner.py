@@ -31,6 +31,14 @@ route                    when
                         stop paying for full-batch padding.
 ======================  =================================================
 
+Full-VECTOR queries (``Query(target=None)`` — the caller wants the
+whole distance array) historically bypassed the planner; they now have
+their own ``full_vector`` route: :meth:`WavePlanner.plan_full_vector`
+shapes the miss sources into power-of-two chunks (same padding
+discipline as targeted waves, so small miss sets stop paying full-batch
+padding) and the route keeps its own EMA cost and
+``stats["planner_routes"]`` accounting like every other route.
+
 Cost model: ``observe(route, seconds, count)`` folds measured wall time
 into an exponential moving average of per-query seconds per route.
 Unmeasured routes are optimistically explored (cost 0) so the model
@@ -42,7 +50,7 @@ import dataclasses
 
 import numpy as np
 
-ROUTES = ("cache", "targeted", "bidirectional", "full")
+ROUTES = ("cache", "targeted", "bidirectional", "full", "full_vector")
 
 
 def _next_pow2(x: int) -> int:
@@ -181,6 +189,20 @@ class WavePlanner:
         return WavePlan(full_sources=full_sources, full_pairs=full_pairs,
                         bidi_pairs=bidi_pairs,
                         targeted_waves=targeted_waves)
+
+    def plan_full_vector(self, sources: list[int], *,
+                         batch: int) -> list[list[int]]:
+        """Chunk full-vector miss sources into pow-2-shaped waves.
+
+        Distinct sources only (the service probes its cache first);
+        chunks are at most ``batch`` wide and each pads to
+        :meth:`wave_shape`, so a 3-source miss set costs a 4-lane
+        program, not a full batch.
+        """
+        self.waves_planned += 1
+        batch = max(1, int(batch))
+        queue = list(dict.fromkeys(int(s) for s in sources))
+        return [queue[at: at + batch] for at in range(0, len(queue), batch)]
 
     @staticmethod
     def wave_shape(wave_len: int, batch: int) -> int:

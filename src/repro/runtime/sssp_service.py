@@ -138,10 +138,13 @@ class SSSPService:
         # entries only answer targets their fixed mask certifies.
         self._cache: OrderedDict[
             int, tuple[int, SSSPResult, bool]] = OrderedDict()
-        # (source, target) -> (version, distance, path): bidirectional
-        # answers, same staleness rule as the source cache.
+        # (source, target) -> (version, distance, path, lanes):
+        # bidirectional answers, same staleness rule as the source
+        # cache; `lanes` keeps the answer's two-lane (D, fixed) state so
+        # a delta can warm re-solve hot pairs instead of dropping them.
         self._pairs: OrderedDict[
-            tuple[int, int], tuple[int, float, list | None]] = OrderedDict()
+            tuple[int, int],
+            tuple[int, float, list | None, tuple | None]] = OrderedDict()
         self.landmarks: LandmarkIndex | None = None
         if isinstance(landmarks, LandmarkIndex):
             self.landmarks = landmarks
@@ -178,9 +181,10 @@ class SSSPService:
                           delta_seconds=0.0, warm_refreshed=0,
                           p2p_solves=0, seed_tightness_mean=None,
                           seed_tightness_count=0, bidi_solves=0,
-                          reselects=0,
+                          reselects=0, pair_warm_refreshed=0,
                           planner_routes=dict(cache=0, targeted=0,
-                                              bidirectional=0, full=0))
+                                              bidirectional=0, full=0,
+                                              full_vector=0))
 
     # ------------------------------------------------------------------
     @property
@@ -237,8 +241,8 @@ class SSSPService:
         return entry[1], entry[2]
 
     def _pair_admit(self, source: int, target: int, distance: float,
-                    path: list | None) -> None:
-        self._pairs[(source, target)] = (self.version, distance, path)
+                    path: list | None, lanes: tuple | None = None) -> None:
+        self._pairs[(source, target)] = (self.version, distance, path, lanes)
         self._pairs.move_to_end((source, target))
         while len(self._pairs) > self.cache_sources:
             self._pairs.popitem(last=False)
@@ -286,6 +290,18 @@ class SSSPService:
                 if not self._cache[s][2]:
                     hot.append(s)
             hot.reverse()
+        # the k hottest still-fresh pairs that carried their lane state:
+        # they re-solve WARM through the bidi solver's update (collected
+        # before the version bump makes every stamp stale)
+        hot_pairs: list[tuple[int, int, object, object]] = []
+        if self._bidi is not None and k > 0:
+            for key in reversed(self._pairs):
+                if len(hot_pairs) == k:
+                    break
+                ver, _, _, lanes = self._pairs[key]
+                if ver == self.version and lanes is not None:
+                    hot_pairs.append((key[0], key[1], lanes[0], lanes[1]))
+            hot_pairs.reverse()
         t0 = time.perf_counter()
         eager_lm = self.landmarks is not None and self.refresh_landmarks
         lms = ([int(v) for v in self.landmarks.landmarks]
@@ -296,8 +312,17 @@ class SSSPService:
             self.landmarks.apply_delta(delta, refresh=eager_lm)
         if self._bidi is not None:
             # both bidi lanes (graph + transpose, and any CSR views)
-            # take the same delta, so its solves stay on this version.
-            self._bidi.apply_delta(delta)
+            # take the same delta, so its solves stay on this version —
+            # and the hot pairs re-solve warm from their cached lanes,
+            # re-admitted fresh (the pair-cache mirror of the hot-source
+            # refresh above; the stale tail re-solves lazily).
+            warm_out = self._bidi.update(delta, warm=hot_pairs)
+            for (s, t), r in warm_out.items():
+                self._pair_admit(s, t, r.distance,
+                                 r.path() if np.isfinite(r.distance)
+                                 else None, lanes=(r.D, r.fixed))
+                self._admit(s, r.forward_result(), partial=True)
+            self.stats["pair_warm_refreshed"] += len(warm_out)
         if hot:
             refreshed = self.solver.resolve(hot)  # tracked: no new solves
             np.asarray(refreshed.dist)
@@ -347,11 +372,18 @@ class SSSPService:
                 f"{len(bad)} queries reference vertices outside [0, {n}): "
                 f"first bad query {bad[0]}")
         if not self.p2p:
+            if self.planner is not None:
+                return self._serve_full_planned(queries)
             return self._serve_full(queries)
         full_q = [q for q in queries if q.target is None]
         tgt_q = [q for q in queries if q.target is not None]
         if full_q:
-            self._serve_full(full_q)
+            # full-vector traffic no longer bypasses the planner: it
+            # gets pow-2-shaped waves and its own EMA'd route.
+            if self.planner is not None:
+                self._serve_full_planned(full_q)
+            else:
+                self._serve_full(full_q)
         if tgt_q:
             if self.planner is not None or self._bidi is not None:
                 self._serve_planned(tgt_q)
@@ -379,6 +411,56 @@ class SSSPService:
                 paid.add(q.source)
             else:
                 self.stats["cache_hits"] += 1
+            if q.target is None:
+                q.dist = np.asarray(res.dist)
+                q.distance = None
+                q.path = None
+            else:
+                q.distance = float(np.asarray(res.dist[q.target]))
+                q.path = (res.path_to(q.target)
+                          if np.isfinite(q.distance) else None)
+            q.done = True
+        return queries
+
+    def _serve_full_planned(self, queries: list[Query]) -> list[Query]:
+        """Planner-routed full path: miss sources become pow-2-shaped
+        waves (``plan_full_vector``) instead of always-full batches, and
+        the route's measured cost feeds the planner EMA under
+        ``full_vector`` with per-query ``stats["planner_routes"]``
+        accounting (hits count as ``cache``).  Answer semantics are
+        identical to :meth:`_serve_full`.
+        """
+        routes = self.stats["planner_routes"]
+        misses = {q.source for q in queries
+                  if not self._cached(q.source)}
+        self.stats["queries"] += len(queries)
+        for wave in self.planner.plan_full_vector(
+                sorted(misses), batch=self.batch):
+            shape = WavePlanner.wave_shape(len(wave), self.batch)
+            padded = wave + [wave[-1]] * (shape - len(wave))
+            t0 = time.perf_counter()
+            batch_res = self.solver.solve_batch(padded)
+            np.asarray(batch_res.dist)  # block: count device time honestly
+            dt = time.perf_counter() - t0
+            self.stats["solve_seconds"] += dt
+            self.stats["batches"] += 1
+            for i, s in enumerate(wave):
+                self._admit(s, batch_res[i])
+            self.stats["sources_solved"] += len(wave)
+            self.planner.observe("full_vector", dt, len(wave))
+        paid = set()   # missing sources whose triggering query is consumed
+        for q in queries:
+            res = self._lookup(q.source)
+            if res is None:  # evicted mid-wave: cache smaller than the wave
+                self._solve_missing([q.source])
+                res = self._lookup(q.source)
+                routes["full_vector"] += 1
+            elif q.source in misses and q.source not in paid:
+                paid.add(q.source)
+                routes["full_vector"] += 1
+            else:
+                self.stats["cache_hits"] += 1
+                routes["cache"] += 1
             if q.target is None:
                 q.dist = np.asarray(res.dist)
                 q.distance = None
@@ -491,7 +573,7 @@ class SSSPService:
             ans = (r.distance,
                    r.path() if np.isfinite(r.distance) else None)
             out[(s, t)] = ans
-            self._pair_admit(s, t, ans[0], ans[1])
+            self._pair_admit(s, t, ans[0], ans[1], lanes=(r.D, r.fixed))
             self._admit(s, r.forward_result(), partial=True)
             if est is not None:
                 e = float(est[i])

@@ -35,6 +35,18 @@ vmapped program; exact distance + stitched path):
     bidi = sssp.BidirectionalSolver(graph, landmarks=index)
     r = bidi.solve(s, t)                         # r.distance, r.path()
 
+Graph fleets (many same-shape graphs, one vmapped program — per-graph
+delta streams and warm refresh in one dispatch):
+
+    fleet = sssp.build_fleet(host_graphs)        # normalize + stack [F, ...]
+    fs = sssp.FleetSolver(fleet)
+    fs.solve(sources)                            # one source per member
+    fs.update(sssp.stack_deltas(per_member_deltas))   # F streams, 1 dispatch
+    fs.resolve()                                 # warm-refreshed fleet state
+
+The rush-hour scenario driver lives in ``repro.runtime.fleet``
+(``CongestionReplay`` — tick drift + query traffic + chaos hooks).
+
 The legacy entry points ``run_sssp`` / ``run_sssp_ell`` /
 ``run_sssp_distributed`` remain importable here as deprecation shims.
 """
@@ -49,6 +61,9 @@ from repro.core.sssp.bidirectional import (  # noqa: F401
     BidirectionalSolver, BidiResult)
 from repro.core.sssp.landmarks import (  # noqa: F401
     LandmarkIndex, ReselectPolicy, seed_lower_bounds, select_landmarks)
+from repro.core.sssp.fleet import (  # noqa: F401
+    FleetBatchResult, FleetResult, FleetSolver, GraphFleet, build_fleet,
+    stack_deltas)
 from repro.core.sssp.engine import (  # noqa: F401
     SP1_RULES, SP2_RULES, SP3_RULES, SP3_CONFIG, SP4_CONFIG, SSSPConfig,
     SSSPResult, run_sssp, run_sssp_ell, run_sssp_traced)

@@ -1,0 +1,284 @@
+"""Graph-fleet subsystem: fleet solves bitwise-equal to per-graph
+solves on every family × {cold, after per-graph deltas}, one compiled
+program per fleet shape, stacked-delta semantics, congestion-replay
+dropout/restart bitwise resume, and the PR's serving satellites
+(planner full_vector route, warm pair-cache refresh)."""
+import numpy as np
+import pytest
+
+from repro.core import generators as gen
+from repro.core.graph import HostGraph, build_graph
+from repro.core.sssp.bidirectional import BidirectionalSolver
+from repro.core.sssp.dynamic import make_delta, random_delta
+from repro.core.sssp.fleet import (FleetSolver, GraphFleet, build_fleet,
+                                   stack_deltas)
+from repro.core.sssp.solver import Solver
+from repro.distributed.fault import FaultInjector
+from repro.runtime.fleet import CongestionReplay
+from repro.runtime.planner import WavePlanner
+from repro.runtime.sssp_service import Query, SSSPService
+
+FAMILIES = ["gnp", "dag", "unweighted", "grid", "power_law", "chain",
+            "geometric"]
+
+
+def _family_fleet(family, n=160, size=3):
+    """A fleet of same-family graphs differing by seed (and so by true
+    edge count — build_fleet normalizes the pads)."""
+    return build_fleet([gen.make(family, n, seed=s) for s in range(size)])
+
+
+def _bitwise(a, b):
+    return np.array_equal(np.asarray(a), np.asarray(b))
+
+
+def _assert_member_equal(res, i, ref):
+    r = res.result(i)
+    assert _bitwise(r.dist, ref.dist)
+    assert _bitwise(r.C, ref.C) and _bitwise(r.fixed, ref.fixed)
+    assert r.rounds == ref.rounds and r.fixed_by == ref.fixed_by
+
+
+# ---------------------------------------------------------------------------
+# (a) cold fleet solves: bitwise vs per-graph Solver per family
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("family", FAMILIES)
+def test_fleet_cold_bitwise_vs_per_graph(family):
+    fleet = _family_fleet(family)
+    fs = FleetSolver(fleet)
+    sources = [0, 3 % fleet.n, fleet.n - 1]
+    res = fs.solve(sources)
+    for i in range(fleet.size):
+        ref = Solver(fleet.member(i), backend="segment").solve(sources[i])
+        _assert_member_equal(res, i, ref)
+
+
+@pytest.mark.parametrize("family", FAMILIES)
+def test_fleet_after_deltas_bitwise_vs_per_graph(family):
+    fleet = _family_fleet(family)
+    fs = FleetSolver(fleet)
+    sources = [1 % fleet.n, 0, fleet.n - 1]
+    fs.solve(sources)
+    # per-graph delta streams with DIFFERENT k per member exercises the
+    # stacked-delta padding
+    deltas = [random_delta(fleet.member(i), 3 + 2 * i, seed=40 + i)
+              for i in range(fleet.size)]
+    stats = fs.update(stack_deltas(deltas))
+    assert stats["warm_refreshed"] == fleet.size
+    res = fs.resolve()
+    for i in range(fleet.size):
+        g_i = fleet.member(i).apply_delta(deltas[i])
+        ref = Solver(g_i, backend="segment").solve(sources[i])
+        r = res.result(i)
+        # the warm refresh converges in fewer rounds than a cold solve;
+        # the bitwise contract is on the landed state, not the trajectory
+        assert _bitwise(r.dist, ref.dist)
+        assert _bitwise(r.C, ref.C) and _bitwise(r.fixed, ref.fixed)
+        assert r.rounds <= ref.rounds
+
+
+def test_fleet_batch_bitwise_vs_per_graph():
+    fleet = _family_fleet("geometric")
+    fs = FleetSolver(fleet)
+    sources = np.asarray([[0, 5, 9], [1, 2, 3], [7, 0, fleet.n - 1]])
+    res = fs.solve_batch(sources)
+    for f in range(fleet.size):
+        solver = Solver(fleet.member(f), backend="segment")
+        for i in range(sources.shape[1]):
+            ref = solver.solve(int(sources[f, i]))
+            r = res.result(f, i)
+            assert _bitwise(r.dist, ref.dist) and _bitwise(r.C, ref.C)
+            assert r.rounds == ref.rounds
+
+
+# ---------------------------------------------------------------------------
+# (b) one compiled program per fleet shape
+# ---------------------------------------------------------------------------
+
+def test_fleet_no_retrace_across_sources_and_deltas():
+    fleet = _family_fleet("gnp", n=120)
+    fs = FleetSolver(fleet)
+    fs.solve([0, 1, 2])
+    fs.solve([5, 6, 7])                      # traced sources: no retrace
+    for rep in range(2):                     # delta'd graphs: no retrace
+        deltas = [random_delta(fs.fleet.member(i), 4, seed=rep * 10 + i)
+                  for i in range(fs.size)]
+        fs.update(stack_deltas(deltas))
+    fs.solve([3, 4, 5])
+    assert fs.trace_count == 1
+    assert fs.warm_trace_count == 1
+    fs.solve_batch([[0, 1], [2, 3], [4, 5]])
+    fs.solve_batch([[5, 4], [3, 2], [1, 0]])
+    assert fs.trace_count == 2               # one more program per B shape
+
+
+# ---------------------------------------------------------------------------
+# (c) fleet construction: stacking rules and member round-trips
+# ---------------------------------------------------------------------------
+
+def test_stack_requires_matching_shapes():
+    a = build_graph(*gen.make("gnp", 100, seed=0))
+    b = build_graph(*gen.make("gnp", 140, seed=0))
+    with pytest.raises(ValueError, match="share"):
+        GraphFleet.stack([a, b])
+    with pytest.raises(ValueError, match="empty"):
+        GraphFleet.stack([])
+
+
+def test_build_fleet_normalizes_pads_and_members_roundtrip():
+    members = [gen.make("power_law", 150, seed=s) for s in range(3)]
+    fleet = build_fleet(members)
+    assert fleet.es == tuple(len(m[1]) for m in members)
+    for i, (n, src, dst, w) in enumerate(members):
+        g = fleet.member(i)
+        assert g.e == len(src)
+        direct = HostGraph(n, src, dst, w).to_device(
+            edge_pad_multiple=fleet.e_pad)
+        assert _bitwise(g.src, direct.src) and _bitwise(g.w, direct.w)
+
+
+def test_stacked_delta_shape_validation():
+    fleet = _family_fleet("chain", n=100)
+    fs = FleetSolver(fleet)
+    fs.solve([0, 0, 0])
+    lone = random_delta(fleet.member(0), 4, seed=1)
+    with pytest.raises(ValueError, match="k_pad"):
+        fs.update(lone)
+
+
+# ---------------------------------------------------------------------------
+# (d) chaos: dropout/restart resumes bitwise; stragglers get flagged
+# ---------------------------------------------------------------------------
+
+def _replay(fault, manager=None, ticks=6):
+    fleet = _family_fleet("geometric", n=100, size=4)
+    rp = CongestionReplay(FleetSolver(fleet), seed=5, ckpt_every=2,
+                          queries_per_tick=4, fault=fault, manager=manager,
+                          straggler_z=1.2)
+    stats = rp.run(ticks)
+    return rp, stats
+
+
+def test_dropout_restart_bitwise():
+    clean, _ = _replay(None)
+    chaos, st = _replay(FaultInjector({3: ("dropout", 0)}))
+    assert st["restarts"] == 1 and st["chaos_events"] == 1
+    assert _bitwise(clean.weights(), chaos.weights())
+    assert _bitwise(clean.distances(), chaos.distances())
+    # and the resumed state is RIGHT, not just consistent: cold re-solve
+    for i in range(chaos.fleet.size):
+        ref = Solver(chaos.fleet.member(i), backend="segment").solve(
+            i % chaos.fleet.n)
+        assert _bitwise(chaos.distances()[i], ref.dist)
+
+
+def test_dropout_restart_bitwise_on_disk(tmp_path):
+    from repro.checkpoint.manager import CheckpointManager
+    clean, _ = _replay(None)
+    chaos, st = _replay(FaultInjector({3: ("dropout", 0)}),
+                        manager=CheckpointManager(str(tmp_path), keep=2))
+    assert st["restarts"] == 1
+    assert _bitwise(clean.weights(), chaos.weights())
+    assert _bitwise(clean.distances(), chaos.distances())
+
+
+def test_straggler_flagged_and_replay_stats():
+    # two stalls on the same virtual host -> z-score outlier
+    _, st = _replay(FaultInjector({2: ("straggler", 60),
+                                   6: ("straggler", 60)}), ticks=8)
+    assert st["stragglers_flagged"] >= 1
+    assert st["restarts"] == 0
+    assert st["ticks"] == 8 and st["queries"] == 8 * 4 * 4
+    assert st["cache_hits"] > 0
+    assert st["fleet_dispatches"] >= 8
+
+
+def test_fault_injector_consume_once():
+    fi = FaultInjector({2: ("dropout", 0)})
+    assert fi.poll(1) is None
+    assert fi.poll(2) == ("dropout", 0)
+    assert fi.poll(2) is None                # replayed tick runs clean
+    assert fi.events == [(2, "dropout", 0)]
+    with pytest.raises(ValueError, match="unknown fault"):
+        FaultInjector({0: ("meteor", 1)})
+
+
+# ---------------------------------------------------------------------------
+# (e) satellite: planner full_vector route
+# ---------------------------------------------------------------------------
+
+def test_planner_full_vector_waves_and_cost():
+    p = WavePlanner()
+    waves = p.plan_full_vector([9, 3, 9, 5], batch=8)
+    assert waves == [[9, 3, 5]]              # deduplicated, one wave
+    assert WavePlanner.wave_shape(3, 8) == 4  # pow-2 pad, not full batch
+    p.observe("full_vector", 0.5, 10)
+    assert p.cost("full_vector") == pytest.approx(0.05)
+
+
+def test_service_full_vector_route_accounting():
+    g = build_graph(*gen.make("geometric", 150, seed=3))
+    svc = SSSPService(g, batch=8, planner=True)
+    qs = [Query(source=s) for s in (4, 8, 8, 4, 15)]
+    svc.serve(qs)
+    routes = svc.stats["planner_routes"]
+    assert routes["full_vector"] == 3        # unique misses pay
+    assert routes["cache"] == 2              # duplicates ride free
+    assert svc.planner.cost("full_vector") is not None
+    ref = Solver(g, backend="segment")
+    for q in qs:
+        assert _bitwise(q.dist, ref.solve(q.source).dist)
+    svc.serve([Query(source=4)])             # fresh entry: pure cache
+    assert routes["full_vector"] == 3 and routes["cache"] == 3
+
+
+# ---------------------------------------------------------------------------
+# (f) satellite: pair-cache warm refresh
+# ---------------------------------------------------------------------------
+
+def test_bidi_update_warm_pairs_bitwise():
+    g = build_graph(*gen.make("geometric", 150, seed=2))
+    bidi = BidirectionalSolver(g, backend="segment")
+    pairs = [(0, 149), (3, 77)]
+    warm = []
+    for s, t in pairs:
+        r = bidi.solve(s, t)
+        warm.append((s, t, r.D, r.fixed))
+    delta = random_delta(bidi.graph, 6, seed=30)
+    out = bidi.update(delta, warm=warm)
+    assert set(out) == set(pairs)
+    ref = Solver(bidi.graph, backend="segment")
+    for (s, t), r in out.items():
+        full = ref.solve(s)
+        # warm lanes run to full fixpoint: forward lane bitwise-equal to
+        # a cold solve on the new graph, distance refolds to its bits
+        assert _bitwise(r.D[0], full.dist)
+        assert np.float32(r.distance) == np.asarray(full.dist)[t].astype(
+            np.float32)
+    assert bidi.warm_trace_count == 1 and bidi.warm_solves == 2
+
+
+def test_service_pair_warm_refresh():
+    g = build_graph(*gen.make("geometric", 200, seed=4))
+    svc = SSSPService(g, batch=8, landmarks=4, planner=True,
+                      bidirectional=True)
+    svc.serve([Query(source=0, target=190), Query(source=3, target=150)])
+    hot = [k for k, v in svc._pairs.items() if v[3] is not None]
+    assert hot                                # bidi answers carry lanes
+    svc.apply_delta(random_delta(svc.solver.graph, 5, seed=99))
+    assert svc.stats["pair_warm_refreshed"] == len(hot)
+    ref = Solver(svc.solver.graph, backend="segment")
+    fresh = 0
+    for (s, t), (ver, d, path, lanes) in svc._pairs.items():
+        if ver != svc.version:
+            continue
+        fresh += 1
+        assert lanes is not None              # refreshed entries re-arm
+        assert np.float32(d) == np.asarray(ref.solve(s).dist)[t].astype(
+            np.float32)
+    assert fresh >= len(hot)
+    # a warm-refreshed pair answers from cache at the new version
+    before = svc.stats["planner_routes"]["cache"]
+    svc.serve([Query(source=hot[0][0], target=hot[0][1])])
+    assert svc.stats["planner_routes"]["cache"] == before + 1
