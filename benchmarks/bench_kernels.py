@@ -10,7 +10,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.kernels import ref, ops
+from repro.kernels import ref
 
 
 def _time(fn, reps=5):

@@ -8,7 +8,6 @@ subsumes the in-version per Theorem 4 / Lemma 9).
 """
 from __future__ import annotations
 
-import numpy as np
 
 from repro.core import generators as gen
 from repro.core.graph import HostGraph

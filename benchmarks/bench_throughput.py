@@ -7,7 +7,6 @@ from __future__ import annotations
 
 import time
 
-import numpy as np
 
 from repro.core import generators as gen
 from repro.core.graph import HostGraph

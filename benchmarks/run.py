@@ -19,7 +19,6 @@
 from __future__ import annotations
 
 import argparse
-import sys
 import time
 
 

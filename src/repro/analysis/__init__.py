@@ -1,0 +1,32 @@
+"""Static analysis of *compiled programs*: contracts, lint, trace audit.
+
+The repo's value proposition is that five backends, warm re-solve,
+bidirectional, and fleet paths are bitwise-equivalent realizations of
+one round body.  The invariants that make that true — no silent dense
+fallback, no host sync inside the while_loop, one trace per shape,
+f32/i32 dtype discipline — are *program* properties, not output
+properties, so the runtime test suite can only spot-check them.  This
+package checks the programs themselves:
+
+  contracts     the ``@contract`` registry: invariants declared next to
+                the code they govern, plus the KNOWN_VIOLATIONS waivers.
+  jaxpr_lint    walks the ClosedJaxpr of every registered solver route
+                and verdicts it against the declared contracts.
+  trace_audit   compile-cache auditor: records abstract signatures and
+                explains retraces; the shared ``assert_no_retrace``
+                pytest helper lives here.
+  astlint       repo-specific AST rules over the hot-path sources.
+  check         the CLI gate: ``python -m repro.analysis.check --ci``.
+"""
+from repro.analysis.contracts import (KNOWN_VIOLATIONS, REGISTRY,
+                                      ContractSpec, Waiver, contract)
+from repro.analysis.jaxpr_lint import (LintReport, RouteVerdict, lint_route,
+                                       walk_jaxpr)
+from repro.analysis.trace_audit import (TraceAudit, assert_no_retrace,
+                                        trace_counts)
+
+__all__ = [
+    "ContractSpec", "Waiver", "contract", "REGISTRY", "KNOWN_VIOLATIONS",
+    "LintReport", "RouteVerdict", "lint_route", "walk_jaxpr",
+    "TraceAudit", "assert_no_retrace", "trace_counts",
+]

@@ -1,0 +1,267 @@
+"""The contract gate: ``python -m repro.analysis.check --ci``.
+
+Runs every static pass over the repo and writes
+``experiments/analysis/contracts.json``:
+
+  1. imports the governed modules (their ``@contract`` decorators fill
+     the registry), probe-traces every solver route, and verdicts each
+     jaxpr against the declared contracts (:mod:`jaxpr_lint`);
+  2. audits the waiver list — an *expired* waiver lets its violation
+     FAIL, a *stale* waiver (matches nothing anymore: the gap it
+     excused was fixed) fails the gate until it is deleted;
+  3. checks composition contracts (the service has no program of its
+     own — it rides solver routes, which must exist and not FAIL);
+  4. runs the repo-specific AST rules (:mod:`astlint`);
+  5. runs ruff with the repo baseline config, when ruff is installed
+     (the CI image installs it from requirements-dev.txt; the gate
+     skips it gracefully where it is absent).  Ruff output is
+     ADVISORY — recorded in the JSON and printed, never gating —
+     until a ruff-equipped environment verifies a green baseline.
+
+``--mutate host_sync`` / ``--mutate f64`` seed a defect into a
+throwaway copy of a real route and MUST make the gate exit non-zero —
+the mutation tests pin that.
+
+Exit status: 0 iff every route is PASS or KNOWN_VIOLATION, no stale or
+expired waivers, no AST findings, and composition holds.
+"""
+from __future__ import annotations
+
+import argparse
+import datetime
+import json
+import shutil
+import subprocess
+import sys
+from pathlib import Path
+
+from repro.analysis import astlint
+from repro.analysis.contracts import KNOWN_VIOLATIONS, REGISTRY
+from repro.analysis.jaxpr_lint import LintReport, lint_route
+from repro.analysis.routes import Route, build_routes
+
+
+def _repo_root() -> Path:
+    # src/repro/analysis/check.py -> repo root three levels up from src/
+    return Path(__file__).resolve().parents[3]
+
+
+def _import_governed_modules() -> None:
+    """Populate the contract registry: specs live next to the code."""
+    import repro.core.sssp.backends    # noqa: F401
+    import repro.core.sssp.bidirectional  # noqa: F401
+    import repro.core.sssp.dynamic     # noqa: F401
+    import repro.core.sssp.engine      # noqa: F401
+    import repro.core.sssp.fleet       # noqa: F401
+    import repro.core.sssp.solver      # noqa: F401
+    import repro.runtime.sssp_service  # noqa: F401
+
+
+def _mutant_route(kind: str) -> Route:
+    """Seed a defect into a throwaway copy of the segment cold route.
+
+    ``host_sync``: a ``pure_callback`` round-trip on the result —
+    the jaxpr-level stand-in for ``.item()``/``device_get`` (which
+    cannot even trace).  ``f64``: a float64 promotion of the distance
+    vector under ``enable_x64``.  Both must FAIL the gate.
+    """
+    import jax
+    import jax.numpy as jnp
+
+    from repro.analysis.routes import _probe_graph
+    from repro.core.graph import build_graph
+    from repro.core.sssp.solver import Solver
+
+    nn, src, dst, w = _probe_graph()
+    g = build_graph(nn, src, dst, w)
+    sv = Solver(g, backend="segment")
+    zeros1 = jnp.zeros((nn,), jnp.float32)
+    argv = (sv.graph, sv.ell, sv.csr, jnp.int32(0), jnp.int32(-1), zeros1)
+
+    if kind == "host_sync":
+        def bad(*args):
+            out = sv._jit_one(*args)
+            x = jax.tree_util.tree_leaves(out)[0]
+            return jax.pure_callback(
+                lambda v: v, jax.ShapeDtypeStruct(x.shape, x.dtype), x)
+
+        cj = jax.make_jaxpr(bad)(*argv)
+    elif kind == "f64":
+        def bad(*args):
+            out = sv._jit_one(*args)
+            x = jax.tree_util.tree_leaves(out)[0]
+            return x.astype(jnp.float64)
+
+        with jax.experimental.enable_x64():
+            cj = jax.make_jaxpr(bad)(*argv)
+    else:
+        raise SystemExit(f"unknown mutation {kind!r} "
+                         "(choose: host_sync, f64)")
+    return Route(f"mutant.{kind}", cj.jaxpr, frozenset({g.e_pad}),
+                 dict(n=nn, e_pad=g.e_pad, mutation=kind))
+
+
+def _waiver_status(report: LintReport) -> list[dict]:
+    """active / stale / expired verdict for every declared waiver."""
+    used = {
+        (v.waiver.route, v.waiver.rule)
+        for rv in report.routes.values() for v in rv.violations
+        if v.waiver is not None
+    }
+    out = []
+    for w in KNOWN_VIOLATIONS:
+        if w.expired():
+            status = "expired"
+        elif (w.route, w.rule) in used:
+            status = "active"
+        else:
+            status = "stale"
+        out.append(dict(route=w.route, rule=w.rule, reason=w.reason,
+                        expires=w.expires, status=status))
+    return out
+
+
+def _check_compositions(report: LintReport) -> list[str]:
+    """Composition contracts: every composed route pattern must match
+    at least one linted route, and none of the matches may FAIL."""
+    from fnmatch import fnmatch
+    problems = []
+    for spec in REGISTRY.values():
+        for pat in spec.composes:
+            hits = [r for r in report.routes if fnmatch(r, pat)]
+            if not hits:
+                problems.append(
+                    f"[{spec.name}] composes {pat!r} but no such route "
+                    "was traced — the surface rides a program that no "
+                    "longer exists")
+            for r in hits:
+                if report.routes[r].verdict == "FAIL":
+                    problems.append(
+                        f"[{spec.name}] composed route {r} FAILED")
+    return problems
+
+
+def _run_ruff(root: Path) -> dict:
+    exe = shutil.which("ruff")
+    if exe is None:
+        return dict(available=False, ok=True,
+                    note="ruff not installed; skipped (CI installs it "
+                         "from requirements-dev.txt)")
+    proc = subprocess.run(
+        [exe, "check", "src", "tests", "benchmarks", "examples"],
+        cwd=root, capture_output=True, text=True)
+    return dict(available=True, ok=proc.returncode == 0,
+                output=(proc.stdout + proc.stderr).strip()[-4000:])
+
+
+def main(argv: list[str] | None = None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.analysis.check",
+        description="program-contract gate over every solver route")
+    ap.add_argument("--ci", action="store_true",
+                    help="write contracts.json and use exit status as "
+                         "the gate (this is also the default behavior; "
+                         "the flag documents intent in workflows)")
+    ap.add_argument("--out", default=None,
+                    help="output JSON path (default "
+                         "experiments/analysis/contracts.json)")
+    ap.add_argument("--routes", nargs="*", default=["*"],
+                    help="fnmatch patterns selecting routes to lint")
+    ap.add_argument("--mutate", choices=("host_sync", "f64"),
+                    help="seed a defect into a throwaway route; the "
+                         "gate MUST fail (mutation-tests the linter)")
+    ap.add_argument("--no-astlint", action="store_true")
+    ap.add_argument("--no-ruff", action="store_true")
+    args = ap.parse_args(argv)
+
+    root = _repo_root()
+    _import_governed_modules()
+
+    full_sweep = args.routes == ["*"] and args.mutate is None
+    routes = build_routes(include=tuple(args.routes))
+    if args.mutate:
+        routes = {}  # mutation runs lint the mutant alone: fast + exact
+        mut = _mutant_route(args.mutate)
+        routes[mut.name] = mut
+
+    verdicts = {}
+    for name, route in sorted(routes.items()):
+        verdicts[name] = lint_route(
+            name, route.jaxpr, dense_dims=route.dense_dims)
+    report = LintReport(verdicts)
+
+    waivers = _waiver_status(report) if full_sweep else []
+    comp_problems = _check_compositions(report) if full_sweep else []
+    findings = [] if args.no_astlint else astlint.run(root)
+    ruff = dict(available=False, ok=True, note="skipped (--no-ruff)") \
+        if args.no_ruff else _run_ruff(root)
+
+    bad_waivers = [w for w in waivers if w["status"] != "active"]
+    failed = report.failed
+    # ruff is ADVISORY: its findings land in the JSON and the console but
+    # do not flip the exit code, because no green ruff baseline has been
+    # verified in an environment that has ruff installed.  Once CI runs
+    # this gate with ruff present and clean, harden by adding
+    # `and ruff["ok"]` here.
+    ok = (not failed and not bad_waivers and not comp_problems
+          and not findings)
+
+    doc = dict(
+        generated=datetime.datetime.now(datetime.timezone.utc)
+        .isoformat(timespec="seconds"),
+        gate="pass" if ok else "fail",
+        probe=dict(n=48, e=100, seed=7, frontier_cap=16, batch=4),
+        routes=report.to_json(),
+        summary=dict(
+            routes=len(report.routes),
+            passed=sum(1 for v in report.routes.values()
+                       if v.verdict == "PASS"),
+            known_violations=len(report.waived),
+            failed=len(failed),
+        ),
+        waivers=waivers,
+        composition=comp_problems,
+        astlint=[f.format() for f in findings],
+        ruff=ruff,
+    )
+
+    default_name = ("contracts.json" if args.mutate is None
+                    else f"contracts.mutant-{args.mutate}.json")
+    out = Path(args.out) if args.out else (
+        root / "experiments" / "analysis" / default_name)
+    out.parent.mkdir(parents=True, exist_ok=True)
+    out.write_text(json.dumps(doc, indent=2) + "\n")
+
+    # ---- human summary ------------------------------------------------
+    for name, v in sorted(report.routes.items()):
+        flag = {"PASS": "ok ", "KNOWN_VIOLATION": "KV ",
+                "FAIL": "FAIL"}[v.verdict]
+        budget = ("-" if v.dense_budget is None
+                  else f"{v.dense_passes}/{v.dense_budget}")
+        print(f"  [{flag}] {name:<22} dense {budget}")
+        for viol in v.violations:
+            mark = "waived" if viol.waiver else "VIOLATION"
+            print(f"         {mark}: {viol.rule} — {viol.detail}")
+    for w in bad_waivers:
+        print(f"  [FAIL] waiver {w['route']}/{w['rule']} is {w['status']}"
+              + (" — the excused gap was fixed; delete the waiver"
+                 if w["status"] == "stale" else
+                 " — fix the gap or renew the expiry"))
+    for p in comp_problems:
+        print(f"  [FAIL] composition: {p}")
+    for f in findings:
+        print(f"  [FAIL] astlint: {f.format()}")
+    if ruff["available"] and not ruff["ok"]:
+        print("  [warn] ruff (advisory, does not gate):\n"
+              + ruff.get("output", ""))
+    elif not ruff["available"]:
+        print("  [skip] " + ruff.get("note", "ruff unavailable"))
+    print(f"contract gate: {'PASS' if ok else 'FAIL'} "
+          f"({doc['summary']['passed']} pass, "
+          f"{doc['summary']['known_violations']} known-violation, "
+          f"{doc['summary']['failed']} fail) -> {out}")
+    return 0 if ok else 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,174 @@
+"""Program contracts: invariants declared next to the code they govern.
+
+A :class:`ContractSpec` names what must be true of the *compiled
+program* of one or more solver routes — primitives that must appear
+(the frontier route must actually contain the compacted sparse-relax
+path), primitives that must never appear (host callbacks inside the
+round body, ``sort`` in the hot relax), a per-round budget of dense
+full-``e_pad`` sweeps (the ``inWeight_nf``/C-propagation cost the
+ROADMAP names as the wall-time bottleneck), and the 32-bit dtype
+discipline.  Specs are attached with the :func:`contract` decorator in
+the modules they describe (engine, backends, solver, dynamic,
+bidirectional, fleet, service) and collected here in ``REGISTRY``;
+``analysis.jaxpr_lint`` traces each route and verdicts it.
+
+Routes are dotted names like ``"segment.cold"``, ``"frontier.batched"``,
+``"bidi.pair"``, ``"fleet.warm"``; specs select routes by ``fnmatch``
+patterns, so one spec can govern a family (``"*.warm"``).
+
+A violation that is *known and tolerated for now* — today, the
+batched/warm dense fallback of the frontier backend — is not silence
+and not a hard failure: it must match a :class:`Waiver` in
+``KNOWN_VIOLATIONS``, which turns the verdict into ``KNOWN_VIOLATION``
+and keeps CI green *until the waiver expires*.  Fixing the underlying
+gap makes the waiver unmatched (stale), which the gate also reports —
+so a fix forces the waiver's removal and the contract flips to a hard
+requirement forever.
+"""
+from __future__ import annotations
+
+import dataclasses
+import datetime
+from fnmatch import fnmatch
+
+# Primitive names (or substrings, for the callback family) that imply a
+# host round-trip inside a compiled program.  Any of these inside a
+# solver route breaks the "rounds never touch the host" contract.
+HOST_SYNC_PRIMS = ("pure_callback", "io_callback", "debug_callback",
+                   "callback", "infeed", "outfeed")
+
+# 64-bit dtypes: the engine is f32/i32 by design (HBM bandwidth is the
+# round bottleneck; doubling word size halves the roofline).
+WIDE_DTYPES = ("float64", "int64", "uint64", "complex128")
+
+
+@dataclasses.dataclass(frozen=True)
+class ContractSpec:
+    """One declared invariant set over a family of solver routes.
+
+    ``require``/``forbid_hot`` look only inside the hot region (the
+    body+cond of every ``lax.while_loop``); ``forbid`` looks at the
+    whole program.  A ``require`` entry may list alternatives separated
+    by ``|`` (any one satisfies it).  ``require_cond`` looks only inside
+    while-loop *cond* jaxprs (the early-exit predicate lives there).
+
+    ``dense_budget`` caps the number of dense edge sweeps in the hot
+    region — gather/scatter-class eqns touching a full edge-layout
+    dimension (``e_pad``, or the ELL row width).  It is either one int
+    for every matched route or a ``{route-pattern: int}`` dict (most
+    specific match wins; a pattern must match or the budget is
+    unconstrained for that route).
+    """
+
+    name: str
+    routes: tuple[str, ...] = ("*",)
+    require: tuple[str, ...] = ()
+    require_cond: tuple[str, ...] = ()
+    forbid: tuple[str, ...] = ()
+    forbid_hot: tuple[str, ...] = ()
+    dense_budget: int | dict[str, int] | None = None
+    allow_wide_dtypes: bool = False
+    composes: tuple[str, ...] = ()  # route patterns this surface rides on
+    notes: str = ""
+
+    def applies_to(self, route: str) -> bool:
+        return any(fnmatch(route, pat) for pat in self.routes)
+
+    def budget_for(self, route: str) -> int | None:
+        if self.dense_budget is None:
+            return None
+        if isinstance(self.dense_budget, int):
+            return self.dense_budget
+        best, best_len = None, -1
+        for pat, cap in self.dense_budget.items():
+            if fnmatch(route, pat) and len(pat) > best_len:
+                best, best_len = cap, len(pat)
+        return best
+
+
+#: name -> spec; populated by the ``@contract`` decorators at import of
+#: the governed modules (jaxpr_lint imports them all before linting).
+REGISTRY: dict[str, ContractSpec] = {}
+
+
+def contract(name: str, **kw):
+    """Declare a :class:`ContractSpec` next to the code it governs.
+
+    Usable on functions and classes; the spec lands in ``REGISTRY`` and
+    is also attached to the object as ``__contracts__`` so readers can
+    find the invariants from the code side.  Decorating is metadata-only
+    — it never wraps or changes the callable.
+    """
+    spec = ContractSpec(name=name, **kw)
+
+    def deco(obj):
+        REGISTRY[name] = spec
+        try:
+            obj.__contracts__ = getattr(obj, "__contracts__", ()) + (spec,)
+        except (AttributeError, TypeError):
+            pass  # frozen/slotted objects keep the registry entry only
+        return obj
+
+    return deco
+
+
+@dataclasses.dataclass(frozen=True)
+class Waiver:
+    """A known, tolerated contract violation — with an expiry date.
+
+    ``route`` and ``rule`` are fnmatch patterns against the route name
+    and the violation's rule id (``"require:cumsum"``,
+    ``"dense_budget"``, ``"forbid:pure_callback"`` ...).  An expired
+    waiver stops matching and the violation becomes a hard FAIL; a
+    waiver that matches nothing is reported stale (the gap it excused
+    was fixed — delete it).
+    """
+
+    route: str
+    rule: str
+    reason: str
+    expires: str  # ISO date, e.g. "2027-06-30"
+
+    def expired(self, today: datetime.date | None = None) -> bool:
+        today = today or datetime.date.today()
+        return today > datetime.date.fromisoformat(self.expires)
+
+    def matches(self, route: str, rule: str,
+                today: datetime.date | None = None) -> bool:
+        return (not self.expired(today) and fnmatch(route, self.route)
+                and fnmatch(rule, self.rule))
+
+
+#: The repo's open, acknowledged gaps.  Keep this list SHORT: every
+#: entry is a named piece of technical debt with a deadline, surfaced
+#: in every contracts.json the gate writes.
+KNOWN_VIOLATIONS: tuple[Waiver, ...] = (
+    Waiver(
+        route="frontier.batched",
+        rule="require:cumsum",
+        reason="solve_batch runs the DENSE round body under vmap — the "
+               "overflow cond linearizes to select and the batched "
+               "gather/scatter relax measured 3-5x slower than segment "
+               "rounds; the shared per-batch frontier (ROADMAP) lifts "
+               "this.  Until then the sparse compaction is absent from "
+               "the batched program by design, not by accident.",
+        expires="2027-06-30",
+    ),
+    Waiver(
+        route="frontier.warm",
+        rule="require:cumsum",
+        reason="warm refresh is a batched path (vmapped over tracked "
+               "sources) and takes the same measured dense routing as "
+               "solve_batch; see the frontier.batched waiver.",
+        expires="2027-06-30",
+    ),
+)
+
+
+def match_waiver(route: str, rule: str,
+                 waivers: tuple[Waiver, ...] = KNOWN_VIOLATIONS,
+                 today: datetime.date | None = None) -> Waiver | None:
+    for w in waivers:
+        if w.matches(route, rule, today):
+            return w
+    return None

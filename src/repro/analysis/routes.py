@@ -1,0 +1,186 @@
+"""Probe-trace every registered solver entry point into jaxprs.
+
+One small deterministic probe graph, every route the production stack
+can take: 5 backends x {cold, targeted, batched, warm} where the
+backend supports the mode, plus the bidirectional pair programs and the
+fleet programs.  Each route is the *abstract trace* of the exact jitted
+callable the facade dispatches to — not a re-implementation — so what
+the linter sees is what production compiles.
+
+Probe sizes are chosen so the edge-layout dimensions the dense-pass
+counter keys on (``e_pad``, the ELL row width, the sharded local
+``e_pad``) cannot collide with vertex/batch/frontier dimensions; the
+builder asserts that.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from repro.analysis.contracts import contract  # noqa: F401  (re-export)
+
+
+@dataclasses.dataclass
+class Route:
+    """One traced entry point, ready for the linter."""
+
+    name: str
+    jaxpr: object                  # jax ClosedJaxpr
+    dense_dims: frozenset[int]     # edge-layout dims for the pass counter
+    meta: dict
+
+
+def _probe_graph(n: int = 48, e: int = 100, seed: int = 7):
+    """Deterministic loop-free probe graph (host arrays)."""
+    rng = np.random.default_rng(seed)
+    src = rng.integers(0, n, e)
+    dst = (src + rng.integers(1, n, e)) % n
+    w = rng.uniform(0.1, 1.0, e).astype(np.float32)
+    return n, src.astype(np.int64), dst.astype(np.int64), w
+
+
+def build_routes(n: int = 48, e: int = 100, seed: int = 7,
+                 frontier_cap: int = 16, batch: int = 4,
+                 include: tuple[str, ...] = ("*",)) -> dict[str, Route]:
+    """Trace every solver route on one probe graph.
+
+    ``include`` filters by fnmatch pattern (the CLI's ``--routes``).
+    Abstract tracing only — nothing is compiled or executed.
+    """
+    import jax
+    import jax.numpy as jnp
+    from fnmatch import fnmatch
+
+    from repro.core.graph import build_graph
+    from repro.core.sssp.bidirectional import BidirectionalSolver
+    from repro.core.sssp.dynamic import DynamicSolver, make_delta
+    from repro.core.sssp.fleet import FleetSolver, build_fleet, stack_deltas
+    from repro.core.sssp.solver import Solver
+
+    nn, src, dst, w = _probe_graph(n, e, seed)
+    g = build_graph(nn, src, dst, w)
+    e_pad = g.e_pad
+    zeros1 = jnp.zeros((nn,), jnp.float32)
+    zerosB = jnp.zeros((batch, nn), jnp.float32)
+    srcB = jnp.zeros((batch,), jnp.int32)
+    tgtB = jnp.full((batch,), -1, jnp.int32)
+    none_t, some_t = jnp.int32(-1), jnp.int32(5)
+    s0 = jnp.int32(0)
+
+    routes: dict[str, Route] = {}
+
+    def want(name: str) -> bool:
+        return any(fnmatch(name, pat) for pat in include)
+
+    def add(name: str, traced, dims, **meta) -> None:
+        if want(name):
+            routes[name] = Route(name, traced.jaxpr,
+                                 frozenset(int(d) for d in dims),
+                                 dict(n=nn, e_pad=e_pad, **meta))
+
+    def delta_for(graph):
+        return make_delta(graph, [0, 1, 2], [0.5, 0.6, 0.7])
+
+    prevD = jnp.zeros((2, nn), jnp.float32)
+    prevF = jnp.zeros((2, nn), bool)
+
+    # --- segment / ell / pallas / frontier: one Solver each ----------
+    for backend in ("segment", "ell", "pallas", "frontier"):
+        kw = dict(frontier_cap=frontier_cap) if backend == "frontier" else {}
+        sv = Solver(g, backend=backend, **kw)
+        if backend in ("ell", "pallas"):
+            # dense passes on the ELL layout sweep [n_pad, deg_pad] rows
+            dims = {sv.ell.in_src.shape[1]}
+        else:
+            dims = {e_pad}
+        # cold/targeted share one compiled program BY DESIGN (the target
+        # is a traced operand) — they are linted as separate routes with
+        # different contracts (targeted additionally requires the
+        # early-exit predicate in the while cond).
+        cold = sv._jit_one.trace(sv.graph, sv.ell, sv.csr, s0, none_t,
+                                 zeros1)
+        add(f"{backend}.cold", cold, dims)
+        tgt = sv._jit_one.trace(sv.graph, sv.ell, sv.csr, s0, some_t,
+                                zeros1)
+        add(f"{backend}.targeted", tgt, dims)
+        # batched: the frontier backend passes csr=None here — the
+        # measured dense-under-vmap routing this PR turns from silence
+        # into an explicit waived KNOWN_VIOLATION.
+        csr_b = None if backend == "frontier" else sv.csr
+        batched = sv._jit_batch.trace(sv.graph, sv.ell, csr_b, srcB, tgtB,
+                                      zerosB)
+        add(f"{backend}.batched", batched, dims, batch=batch)
+        if backend != "pallas":  # pallas warm == ell warm program family
+            dyn = DynamicSolver(g, backend=backend, **kw)
+            warm = dyn._jit_warm.trace(dyn.graph, dyn.ell, dyn.csr,
+                                       delta_for(dyn.graph), prevD, prevF)
+            add(f"{backend}.warm", warm, dims, tracked=2)
+
+    # --- distributed: shard_map programs (closure-traced) ------------
+    if want("distributed.batched") or want("distributed.warm") \
+            or want("distributed.*"):
+        sd = DynamicSolver(g, backend="distributed")
+        gd = sd.graph  # shard-padded
+        local_e = gd.e_pad  # 1-device CI mesh: local block == e_pad
+        cj = jax.make_jaxpr(
+            lambda: sd._sharded_batch(np.zeros((batch,), np.int32)))()
+        if want("distributed.batched"):
+            routes["distributed.batched"] = Route(
+                "distributed.batched", cj, frozenset({local_e}),
+                dict(n=nn, e_pad=gd.e_pad, batch=batch))
+        dd = delta_for(gd)  # host-side validation must run untraced
+        cjw = jax.make_jaxpr(
+            lambda: sd._jit_warm(gd, None, None, dd, prevD, prevF))()
+        if want("distributed.warm"):
+            routes["distributed.warm"] = Route(
+                "distributed.warm", cjw, frozenset({local_e}),
+                dict(n=nn, e_pad=gd.e_pad, tracked=2))
+
+    # --- bidirectional: the two-lane pair programs --------------------
+    if any(want(f"bidi.{m}") for m in ("pair", "warm")):
+        bidi = BidirectionalSolver(g, backend="segment")
+        ends = jnp.asarray([0, 5], jnp.int32)
+        pair = bidi._jit.trace(bidi._g2, bidi._csr2, ends,
+                               jnp.zeros((2, nn), jnp.float32))
+        add("bidi.pair", pair, {e_pad}, lanes=2)
+        d = delta_for(bidi.graph)
+        rd = make_delta(bidi.rgraph, bidi._rev_perm[[0, 1, 2]],
+                        np.asarray(d.new_w)[:3])
+        from repro.core.sssp.bidirectional import _stack2
+        d2 = _stack2(d, rd)
+        g2_new = jax.tree.map(lambda x: x, bidi._g2)
+        warm = bidi._jit_warm.trace(bidi._g2, g2_new, d2, prevD, prevF)
+        add("bidi.warm", warm, {e_pad}, lanes=2)
+
+    # --- fleet: [F] and [F, B] lane programs --------------------------
+    if any(want(f"fleet.{m}") for m in ("cold", "batched", "warm")):
+        members = [(nn, src, dst, w),
+                   (nn, src, dst, (w * 1.25).astype(np.float32))]
+        fleet = build_fleet(members)
+        fs = FleetSolver(fleet)
+        F = fleet.size
+        fsrc = jnp.zeros((F,), jnp.int32)
+        ftgt = jnp.full((F,), -1, jnp.int32)
+        fc0 = jnp.zeros((F, nn), jnp.float32)
+        cold = fs._jit_solve.trace(fleet.g, fsrc, ftgt, fc0)
+        add("fleet.cold", cold, {fleet.e_pad}, fleet=F)
+        fb = fs._jit_batch.trace(
+            fleet.g, jnp.zeros((F, batch), jnp.int32),
+            jnp.full((F, batch), -1, jnp.int32),
+            jnp.zeros((F, batch, nn), jnp.float32))
+        add("fleet.batched", fb, {fleet.e_pad}, fleet=F, batch=batch)
+        sd2 = stack_deltas([delta_for(fleet.member(i)) for i in range(F)])
+        fw = fs._jit_warm.trace(fleet.g, sd2,
+                                jnp.zeros((F, nn), jnp.float32),
+                                jnp.zeros((F, nn), bool))
+        add("fleet.warm", fw, {fleet.e_pad}, fleet=F)
+
+    # guard the dense-pass counter against dimension collisions: no
+    # vertex/batch/frontier dimension may equal an edge-layout dim.
+    for r in routes.values():
+        clash = r.dense_dims & {nn, nn + 1, batch, 2, frontier_cap}
+        assert not clash, (
+            f"probe sizes collide with edge dims for {r.name}: {clash} — "
+            "adjust build_routes probe parameters")
+    return routes

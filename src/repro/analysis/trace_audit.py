@@ -1,0 +1,221 @@
+"""Compile-cache audit: count traces, explain retraces.
+
+Every solver facade in this repo counts XLA traces with a Python
+side-effect counter (``Solver.trace_count``, ``DynamicSolver.
+warm_trace_count``, the module-level ``delta_stepping.trace_count()`` /
+``bellman_ford.trace_count()`` callables) and each test file grew its
+own before/after arithmetic around them.  This module is the one shared
+vocabulary for all of it:
+
+  * :func:`trace_counts` reads every counter an object exposes, whatever
+    its convention;
+  * :func:`assert_no_retrace` is the pytest helper — a context manager
+    asserting that a block performs exactly ``allow`` new traces
+    (default 0) across any mix of solvers and modules;
+  * :class:`TraceAudit` wraps a jit entry point, records the abstract
+    signature of every call, and *explains* a retrace: which argument's
+    shape / dtype / weak_type / static value changed.
+
+The auditor keys on the same information as jax's own compile cache —
+pytree structure plus per-leaf ``(shape, dtype, weak_type)`` and the
+repr of non-array leaves — so "new signature" here means "jit will
+trace again" there.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import inspect
+from contextlib import contextmanager
+from typing import Any, Callable
+
+_COUNTER_NAMES = ("trace_count", "warm_trace_count")
+
+
+def trace_counts(obj: Any) -> dict[str, int]:
+    """Read every trace counter ``obj`` exposes.
+
+    Handles both conventions in the repo: integer attributes
+    (``Solver.trace_count``, ``FleetSolver.warm_trace_count``) and
+    zero-arg module-level callables (``delta_stepping.trace_count()``).
+    Returns ``{counter_name: value}``; empty dict if ``obj`` has none.
+    """
+    counts: dict[str, int] = {}
+    for name in _COUNTER_NAMES:
+        val = getattr(obj, name, None)
+        if val is None:
+            continue
+        if callable(val):
+            try:
+                if inspect.signature(val).parameters:
+                    continue  # not a 0-arg counter
+            except (TypeError, ValueError):
+                continue
+            val = val()
+        if isinstance(val, int) and not isinstance(val, bool):
+            counts[name] = val
+    return counts
+
+
+def _label(obj: Any) -> str:
+    return getattr(obj, "__name__", type(obj).__name__)
+
+
+@contextmanager
+def assert_no_retrace(*objs: Any, allow: int = 0):
+    """Assert a with-block performs exactly ``allow`` new traces.
+
+    ``objs`` may mix solver facades and counter-bearing modules; all
+    their counters are summed.  ``allow=0`` (the default) pins the
+    cache-hit contract ("solving a new source must not retrace");
+    ``allow=1`` pins an *expected* compile ("a new batch shape costs
+    exactly one trace").  Raises ``AssertionError`` with a per-object
+    breakdown otherwise.
+    """
+    if not objs:
+        raise ValueError("assert_no_retrace needs at least one object "
+                         "exposing a trace counter")
+    before = [trace_counts(o) for o in objs]
+    for o, b in zip(objs, before):
+        if not b:
+            raise ValueError(
+                f"{_label(o)} exposes no trace counter "
+                f"({'/'.join(_COUNTER_NAMES)}) — nothing to audit")
+    yield
+    after = [trace_counts(o) for o in objs]
+    deltas = {
+        f"{_label(o)}.{name}": a[name] - b.get(name, 0)
+        for o, b, a in zip(objs, before, after)
+        for name in a
+    }
+    total = sum(deltas.values())
+    assert total == allow, (
+        f"expected exactly {allow} new trace(s), got {total}: "
+        + ", ".join(f"{k}+{v}" for k, v in deltas.items() if v)
+        + (" (no counter moved)" if total == 0 else ""))
+
+
+# --------------------------------------------------------------------
+# Signature recording
+# --------------------------------------------------------------------
+
+def _leaf_key(x: Any) -> tuple:
+    """The part of one pytree leaf that jax's compile cache keys on."""
+    shape = getattr(x, "shape", None)
+    dtype = getattr(x, "dtype", None)
+    if shape is not None and dtype is not None:
+        weak = bool(getattr(x, "weak_type",
+                            getattr(getattr(x, "aval", None),
+                                    "weak_type", False)))
+        return ("array", tuple(shape), str(dtype), weak)
+    if isinstance(x, (bool, int, float, complex)):
+        # python scalars become weakly-typed 0-d arrays under jit; a
+        # *type* change (int -> float) retraces, a value change does not
+        # ... unless the callable treats it statically, which the repr
+        # fallback below covers for hashable statics.
+        return ("scalar", type(x).__name__)
+    return ("static", repr(x))
+
+
+def signature_of(*args, **kwargs) -> tuple:
+    """Abstract signature of a call: treedef + per-leaf cache keys."""
+    import jax
+    leaves, treedef = jax.tree_util.tree_flatten((args, kwargs))
+    return (str(treedef), tuple(_leaf_key(x) for x in leaves))
+
+
+def _diff(sig_a: tuple, sig_b: tuple, *, paths_a, paths_b) -> list[str]:
+    out: list[str] = []
+    if sig_a[0] != sig_b[0]:
+        out.append(f"pytree structure changed: {sig_a[0]} -> {sig_b[0]}")
+    pairs = zip(paths_a, sig_a[1], paths_b, sig_b[1])
+    for path_a, key_a, path_b, key_b in pairs:
+        if key_a != key_b:
+            out.append(f"{path_a or path_b}: {_fmt(key_a)} -> {_fmt(key_b)}")
+    if len(sig_a[1]) != len(sig_b[1]):
+        out.append(f"leaf count changed: {len(sig_a[1])} -> "
+                   f"{len(sig_b[1])}")
+    return out
+
+
+def _fmt(key: tuple) -> str:
+    if key[0] == "array":
+        _, shape, dtype, weak = key
+        return f"{dtype}{list(shape)}" + (" (weak)" if weak else "")
+    if key[0] == "scalar":
+        return f"py {key[1]}"
+    return key[1]
+
+
+@dataclasses.dataclass
+class CallRecord:
+    """One recorded call: signature + whether it was new to the cache."""
+
+    signature: tuple
+    paths: tuple[str, ...]
+    fresh: bool
+
+
+class TraceAudit:
+    """Record jit-call signatures and explain why a retrace happened.
+
+    Use either as a passive recorder (``audit.record(*args)``) or wrap
+    the entry point once (``fn = audit.wrap(jitted_fn)``) so every call
+    is recorded.  ``audit.fresh_count`` approximates the number of
+    compiles; :meth:`explain_last` names exactly which argument's
+    shape / dtype / weak_type / static value diverged from the previous
+    distinct signature — the answer to "why did this retrace?".
+    """
+
+    def __init__(self, name: str = "jit"):
+        self.name = name
+        self.calls: list[CallRecord] = []
+        self._seen: set[tuple] = set()
+
+    @property
+    def fresh_count(self) -> int:
+        return sum(1 for c in self.calls if c.fresh)
+
+    def record(self, *args, **kwargs) -> bool:
+        """Record one call; returns True iff its signature is new."""
+        import jax
+        sig = signature_of(*args, **kwargs)
+        flat, _ = jax.tree_util.tree_flatten_with_path((args, kwargs))
+        paths = tuple(jax.tree_util.keystr(p) for p, _ in flat)
+        fresh = sig not in self._seen
+        self._seen.add(sig)
+        self.calls.append(CallRecord(sig, paths, fresh))
+        return fresh
+
+    def wrap(self, fn: Callable) -> Callable:
+        """Return ``fn`` with every call recorded by this audit."""
+
+        @functools.wraps(fn)
+        def audited(*args, **kwargs):
+            self.record(*args, **kwargs)
+            return fn(*args, **kwargs)
+
+        audited.__trace_audit__ = self
+        return audited
+
+    def explain_last(self) -> str:
+        """Explain the most recent *fresh* call against its predecessor."""
+        fresh_idx = [i for i, c in enumerate(self.calls) if c.fresh]
+        if not fresh_idx:
+            return f"{self.name}: no calls recorded"
+        last = self.calls[fresh_idx[-1]]
+        prev_idx = [i for i in fresh_idx if i < fresh_idx[-1]]
+        if not prev_idx:
+            return (f"{self.name}: first call — initial trace, "
+                    "nothing to compare")
+        prev = self.calls[prev_idx[-1]]
+        diffs = _diff(prev.signature, last.signature,
+                      paths_a=prev.paths, paths_b=last.paths)
+        if not diffs:
+            return f"{self.name}: signatures identical (no retrace cause)"
+        return (f"{self.name}: retrace caused by:\n  "
+                + "\n  ".join(diffs))
+
+    def to_json(self) -> dict:
+        return dict(name=self.name, calls=len(self.calls),
+                    fresh=self.fresh_count)

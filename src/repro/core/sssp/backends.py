@@ -47,6 +47,7 @@ from typing import Callable
 import jax
 import jax.numpy as jnp
 
+from repro.analysis.contracts import contract
 from repro.core.graph import CsrGraph, EllGraph, Graph, INF
 
 
@@ -66,6 +67,16 @@ def _masked_min_local(x: jax.Array, mask: jax.Array) -> jax.Array:
     return jnp.min(jnp.where(mask, x, INF))
 
 
+@contract(
+    "backend.segment",
+    routes=("segment.*",),
+    require=("scatter-min",),
+    dense_budget={"segment.warm": 11, "segment.*": 8},
+    notes="The default backend relaxes via jax.ops.segment_min over "
+          "the dst-sorted edge list — the compiled program must "
+          "contain the scatter-min lowering in the hot region, and a "
+          "round costs at most the declared number of full-e_pad "
+          "sweeps (warm carries the 2-lane taint/reseed overhead).")
 def segment_prims(g: Graph) -> Primitives:
     """Segment reductions over the dst-sorted edge list (the default)."""
 
@@ -82,6 +93,23 @@ def segment_prims(g: Graph) -> Primitives:
                       masked_min=_masked_min_local)
 
 
+@contract(
+    "backend.ell",
+    routes=("ell.*",),
+    require=("gather", "reduce_min"),
+    dense_budget={"ell.warm": 8, "ell.*": 6},
+    notes="The ELL backend is row-form: relax is a masked row-min over "
+          "the padded in-neighbourhood (gather + reduce_min; no "
+          "scatter at all), which is why its dense budget is the "
+          "lowest of the edge-list backends.")
+@contract(
+    "backend.pallas",
+    routes=("pallas.*",),
+    require=("pallas_call",),
+    dense_budget=11,
+    notes="use_pallas=True must actually route through the Pallas "
+          "kernels: the hot region must contain pallas_call eqns "
+          "(interpret mode on CPU CI still lowers to pallas_call).")
 def ell_prims(g: Graph, ell: EllGraph, use_pallas: bool) -> Primitives:
     """Dense padded in-neighbour (ELL) layout.
 
@@ -107,6 +135,19 @@ def ell_prims(g: Graph, ell: EllGraph, use_pallas: bool) -> Primitives:
                       masked_min=masked_min)
 
 
+@contract(
+    "backend.frontier",
+    routes=("frontier.*",),
+    require=("cumsum", "scatter-min"),
+    dense_budget={"frontier.cold": 10, "frontier.targeted": 10,
+                  "frontier.batched": 8, "frontier.warm": 11},
+    notes="The whole point of this backend is the compacted sparse "
+          "relax: the program must contain the cumsum frontier "
+          "compaction AND the scatter-min relax.  Today the batched "
+          "and warm paths run the dense round body under vmap — the "
+          "missing cumsum there is the ROADMAP's headline gap, waived "
+          "as a KNOWN_VIOLATION in contracts.KNOWN_VIOLATIONS (with "
+          "expiry) instead of silently tolerated.")
 def frontier_prims(g: Graph, csr: CsrGraph, cap: int,
                    use_pallas: bool = False) -> Primitives:
     """Sparse-frontier backend: compacted-buffer relax over the CSR view.
@@ -134,6 +175,14 @@ def frontier_prims(g: Graph, csr: CsrGraph, cap: int,
                       frontier_cap=int(cap))
 
 
+@contract(
+    "backend.distributed",
+    routes=("distributed.*",),
+    require=("scatter-min", "pmin"),
+    dense_budget={"distributed.warm": 11, "distributed.*": 8},
+    notes="Shard-local segment relax + cross-shard pmin combine: both "
+          "must survive compilation (a missing pmin means the combine "
+          "was constant-folded away and shards silently diverge).")
 def distributed_prims(lg: Graph, axes: tuple[str, ...]) -> Primitives:
     """Edge-sharded segment reductions inside a ``shard_map`` body.
 

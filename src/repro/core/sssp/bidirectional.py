@@ -54,7 +54,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.graph import CsrGraph, Graph, HostGraph, INF
+from repro.analysis.contracts import contract
+from repro.core.graph import Graph, HostGraph, INF
 from repro.core.sssp import backends
 from repro.core.sssp.engine import (SP4_CONFIG, SSSPConfig, SSSPResult,
                                     _fixed_by_dict, _init_state, _round,
@@ -146,6 +147,16 @@ class BidiResult:
         return self._path
 
 
+@contract(
+    "bidi.pair_lanes",
+    routes=("bidi.*",),
+    require=("scatter-min",),
+    dense_budget={"bidi.warm": 11, "bidi.*": 8},
+    notes="Forward and reverse searches run as TWO LANES of one "
+          "vmapped segment-backend program (one dispatch per round "
+          "pair, not two); the lanes share the round body, so the "
+          "segment scatter-min relax and the segment dense budget "
+          "apply per lane.")
 class BidirectionalSolver:
     """Compiled bidirectional point-to-point solver over one graph.
 

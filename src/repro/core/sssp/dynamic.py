@@ -51,7 +51,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.graph import EllGraph, Graph
+from repro.analysis.contracts import contract
+from repro.core.graph import Graph
 from repro.core.sssp.engine import (SP4_CONFIG, SSSPConfig, SSSPResult,
                                     _fixed_by_dict, _solve_warm,
                                     delta_taint_seeds)
@@ -232,6 +233,16 @@ def random_delta(g: Graph, k: int, *, seed: int = 0, lo: float = 0.5,
     return make_delta(g, idx, old * rng.uniform(lo, hi, k).astype(np.float32))
 
 
+@contract(
+    "warm.incremental_repair",
+    routes=("*.warm",),
+    require=("gather", "reduce_min"),
+    notes="Every warm path is one compiled program over (delta shape, "
+          "refresh-batch shape): taint the decreased-key seeds, then "
+          "re-run the round body for the tracked lanes.  The hot "
+          "region must still contain the relax gather + masked "
+          "min-reduction — a warm path that lost them is returning "
+          "stale distances, not repairing them.")
 class DynamicSolver(Solver):
     """A Solver whose graph can change between solves.
 

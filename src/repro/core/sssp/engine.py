@@ -45,6 +45,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.analysis.contracts import contract
 from repro.core.graph import Graph, INF
 from repro.core.sssp import backends
 
@@ -377,6 +378,17 @@ def _solve_warm(g: Graph, cfg: SSSPConfig, prev_D, prev_fixed, seeds,
     return state, sweeps, taint
 
 
+@contract(
+    "engine.round_body",
+    routes=("*",),
+    forbid=("callback", "infeed", "outfeed"),
+    forbid_hot=("sort", "top_k"),
+    notes="The round body is bulk-synchronous device code: no host "
+          "round-trip may appear anywhere in a compiled route (the "
+          "callback family covers pure/io/debug callbacks), no sort "
+          "inside the hot relax (masked min-reductions only), and the "
+          "whole engine is f32/i32 (allow_wide_dtypes defaults False: "
+          "a single f64 value doubles the bandwidth of the round).")
 def _round(g: Graph, cfg: SSSPConfig, state: SSSPState,
            prims: backends.Primitives | None = None,
            warm: bool = False) -> SSSPState:

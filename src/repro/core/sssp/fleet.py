@@ -43,6 +43,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.analysis.contracts import contract
 from repro.core.graph import Graph, HostGraph
 from repro.core.sssp import backends
 from repro.core.sssp.engine import (SP4_CONFIG, SSSPConfig, SSSPResult,
@@ -214,7 +215,9 @@ def stack_deltas(deltas) -> GraphDelta:
             [x, np.full(kp - len(x), fill, x.dtype)]).astype(dtype)
 
     has_csr = all(d.csr_pos is not None for d in deltas)
-    return GraphDelta(
+    # inputs are per-member deltas that already went through make_delta's
+    # host-side validation; this only restacks them
+    return GraphDelta(  # astlint: ignore[raw-graphdelta]
         k=jnp.asarray([d.k for d in deltas], jnp.int32),
         edge_idx=jnp.stack([jnp.asarray(pad(d.edge_idx, _IDX_PAD, np.int32))
                             for d in deltas]),
@@ -276,6 +279,16 @@ class FleetBatchResult:
             source=int(self.sources[f, i]), graph=self.fleet.member(f))
 
 
+@contract(
+    "fleet.lockstep",
+    routes=("fleet.*",),
+    require=("scatter-min",),
+    dense_budget={"fleet.warm": 11, "fleet.*": 8},
+    notes="F graphs solve in ONE dispatch: the round body is vmapped "
+          "over the fleet axis on the shape-unified edge layout.  The "
+          "per-member program is the segment backend, so the segment "
+          "scatter-min relax and dense budget hold per member — a "
+          "budget regression here costs F-fold wall time.")
 class FleetSolver:
     """Compiled SSSP over a whole :class:`GraphFleet`.
 

@@ -25,6 +25,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.analysis.contracts import contract
 from repro.core.graph import (CsrGraph, EllGraph, Graph, HostGraph,
                               build_ell)
 from repro.core.sssp import backends
@@ -102,6 +103,17 @@ def _default_frontier_cap(n: int) -> int:
     return _next_pow2(min(max(n // 4, 32), 4096))
 
 
+@contract(
+    "solver.targeted_early_exit",
+    routes=("*.cold", "*.targeted", "*.batched"),
+    require_cond=("dynamic_slice|gather",),
+    notes="Cold and targeted solves share ONE compiled program (the "
+          "target is a traced operand, -1 meaning none); the while-"
+          "loop cond must therefore contain the fixed[target] read — "
+          "dynamic_slice in scalar routes, gather in the vmapped "
+          "batched/fleet routes.  If it disappears, targeted solves "
+          "quietly run to full convergence and the p2p speedup is "
+          "gone with no output change to catch it.")
 class Solver:
     """Compiled multi-source SSSP over one graph.
 

@@ -57,16 +57,65 @@ class StepWatchdog:
         return False
 
 
+def max_zscore_bound(n_hosts: int) -> float:
+    """The largest z-score any of ``n_hosts`` samples can attain.
+
+    For F values standardized by their own sample mean and sample std
+    (ddof=1), max_i (x_i - mu)/sd is bounded by (F-1)/sqrt(F) —
+    attained when one value is extreme and the rest are equal.  A
+    threshold at or above this ceiling can NEVER fire, however slow the
+    straggler — the small-fleet blind spot."""
+    return (n_hosts - 1) / float(np.sqrt(n_hosts))
+
+
+#: a clamped detection additionally requires the host to be this many
+#: times slower than the fleet median — the z-score alone is too noisy
+#: near its ceiling (a uniform 4-host fleet crosses 0.9*ceiling ~20% of
+#: the time on measurement noise; a real straggler is *materially* slow).
+CLAMP_RATIO_GUARD = 1.5
+
+
 def detect_stragglers(step_times: dict[str, list[float]],
                       z_threshold: float = 3.0,
                       min_steps: int = 5) -> list[str]:
-    """hosts whose mean step time is a z-score outlier vs the fleet."""
+    """Hosts whose mean step time is a z-score outlier vs the fleet.
+
+    The z-score of the slowest of F hosts is mathematically bounded by
+    ``(F-1)/sqrt(F)`` (= 1.5 at F=4, 2.67 at F=9), so the default
+    ``z_threshold=3.0`` is unreachable for fleets of ~11 hosts or fewer
+    and used to detect *nothing*, silently.  When the requested
+    threshold is at or above the ceiling it is now clamped to 90% of
+    the ceiling — with a loud RuntimeWarning — and, because a z-score
+    that close to its ceiling is reachable by measurement noise alone,
+    a clamped detection additionally requires the host's mean step time
+    to exceed ``CLAMP_RATIO_GUARD``x the fleet median (a real straggler
+    stretches every bulk-synchronous step; noise does not).  Thresholds
+    below the ceiling keep the pure z-score semantics."""
     hosts = [h for h, t in step_times.items() if len(t) >= min_steps]
     if len(hosts) < 3:
         return []
+    bound = max_zscore_bound(len(hosts))
+    z, clamped = z_threshold, False
+    if z >= bound:
+        z, clamped = 0.9 * bound, True
+        import warnings
+        warnings.warn(
+            f"detect_stragglers: z_threshold={z_threshold:g} is at or "
+            f"above the maximum attainable z-score {bound:.3g} for "
+            f"{len(hosts)} hosts ((F-1)/sqrt(F)) and could never flag "
+            f"anything; clamping to {z:.3g} with a "
+            f"{CLAMP_RATIO_GUARD:g}x-median guard.  Pass a smaller "
+            "z_threshold for small fleets to silence this.",
+            RuntimeWarning, stacklevel=2)
     means = np.array([np.mean(step_times[h]) for h in hosts])
-    mu, sd = np.mean(means), np.std(means) + 1e-9
-    return [h for h, m in zip(hosts, means) if (m - mu) / sd > z_threshold]
+    mu = np.mean(means)
+    sd = np.std(means, ddof=1) + 1e-9
+    med = np.median(means)
+    return [
+        h for h, m in zip(hosts, means)
+        if (m - mu) / sd > z
+        and (not clamped or m > CLAMP_RATIO_GUARD * med)
+    ]
 
 
 def elastic_data_axis(n_hosts_alive: int, chips_per_host: int,

@@ -12,7 +12,6 @@ long_500k cell feasible (DESIGN.md §4).
 """
 from __future__ import annotations
 
-from functools import partial
 
 import jax
 import jax.numpy as jnp

@@ -1,7 +1,6 @@
 """Shared model substrate: norms, RoPE, initializers, dtype policy."""
 from __future__ import annotations
 
-import dataclasses
 
 import jax
 import jax.numpy as jnp

@@ -17,7 +17,6 @@ One parameterized architecture covers all five assigned LM configs
 from __future__ import annotations
 
 import dataclasses
-from functools import partial
 from typing import Callable
 
 import jax

@@ -8,7 +8,6 @@ sampling and simple continuous batching over a request queue.
 from __future__ import annotations
 
 import dataclasses
-from functools import partial
 
 import jax
 import jax.numpy as jnp

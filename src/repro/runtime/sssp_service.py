@@ -52,6 +52,7 @@ from collections import OrderedDict
 
 import numpy as np
 
+from repro.analysis.contracts import contract
 from repro.core.sssp.bidirectional import BidirectionalSolver
 from repro.core.sssp.engine import SP4_CONFIG, SSSPConfig, SSSPResult
 from repro.core.sssp.dynamic import DynamicSolver, GraphDelta
@@ -76,6 +77,16 @@ class Query:
     done: bool = False
 
 
+@contract(
+    "service.rides_solver_routes",
+    routes=(),
+    composes=("segment.*", "*.targeted", "bidi.pair", "*.warm"),
+    notes="The service compiles nothing of its own — every wave the "
+          "planner emits executes a solver program (batched cold "
+          "solves, targeted waves, bidirectional pair solves, warm "
+          "refresh after apply_delta).  The gate checks composition: "
+          "each of these route families must exist and must not FAIL, "
+          "or the serving layer is riding a broken program.")
 class SSSPService:
     """Continuous-batching SSSP server over one (mutable-weight) graph.
 

@@ -11,8 +11,6 @@ params/opt-state updates in-place on device.
 from __future__ import annotations
 
 import dataclasses
-import time
-from functools import partial
 from typing import Any, Callable
 
 import jax

@@ -1,6 +1,4 @@
 """Registry completeness, cell builders, HLO collective parser."""
-import numpy as np
-import pytest
 
 from repro.configs import get_arch, list_archs
 from repro.launch.roofline import (RooflineTerms, parse_collective_bytes)

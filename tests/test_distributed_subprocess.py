@@ -4,7 +4,6 @@ import os
 import subprocess
 import sys
 
-import pytest
 
 SCRIPT = r"""
 import numpy as np, jax

@@ -3,6 +3,7 @@ warm-started incremental re-solve (core/sssp/dynamic.py)."""
 import numpy as np
 import pytest
 
+from repro.analysis.trace_audit import assert_no_retrace
 from repro.core import generators as gen
 from repro.core.graph import HostGraph, build_ell, build_graph
 from repro.core.sssp.reference import dijkstra
@@ -199,12 +200,13 @@ def test_no_retrace_per_delta():
     hg = _graph("gnp", n=120, seed=2)
     dyn = DynamicSolver(hg.to_device())
     dyn.solve_batch([0, 5])
-    for s in range(5):
-        dyn.update(random_delta(dyn.graph, 6, seed=s))
-    assert dyn.warm_trace_count == 1, "update() must not retrace per delta"
-    # k=6 and k=7 pad to the same k_pad=8 -> still no retrace
-    dyn.update(random_delta(dyn.graph, 7, seed=99))
+    dyn.update(random_delta(dyn.graph, 6, seed=0))
     assert dyn.warm_trace_count == 1
+    with assert_no_retrace(dyn):
+        for s in range(1, 5):
+            dyn.update(random_delta(dyn.graph, 6, seed=s))
+        # k=6 and k=7 pad to the same k_pad=8 -> still no retrace
+        dyn.update(random_delta(dyn.graph, 7, seed=99))
     # graph version advanced once per delta
     assert dyn.version == 6
 
@@ -253,9 +255,8 @@ def test_resolve_serves_fresh_sources_without_resolving():
     dyn = DynamicSolver(hg.to_device())
     dyn.solve_batch([0, 4])
     dyn.update(random_delta(dyn.graph, 4, seed=2))
-    before = dyn.trace_count
-    dyn.resolve([0, 4])       # warm-refreshed: no cold solve needed
-    assert dyn.trace_count == before
+    with assert_no_retrace(dyn):
+        dyn.resolve([0, 4])   # warm-refreshed: no cold solve needed
     # a never-seen source triggers exactly one (batched) cold solve
     batch = dyn.resolve([0, 8])
     cold = Solver(dyn.graph).solve(8)

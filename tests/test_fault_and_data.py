@@ -29,6 +29,29 @@ def test_detect_stragglers():
     assert detect_stragglers(uniform) == []
 
 
+def test_detect_stragglers_small_fleet_blind_spot():
+    """The max z-score of F hosts is bounded by (F-1)/sqrt(F) (= 1.5 at
+    F=4), so the default z_threshold=3.0 used to detect NOTHING on
+    small fleets, silently.  It must now clamp — loudly — and still
+    flag a 5x straggler."""
+    from repro.distributed.fault import max_zscore_bound
+    assert max_zscore_bound(4) == pytest.approx(1.5)
+    times = {f"h{i}": [0.10] * 10 for i in range(4)}
+    times["h3"] = [0.50] * 10
+    with pytest.warns(RuntimeWarning, match="maximum attainable z-score"):
+        assert detect_stragglers(times, z_threshold=3.0) == ["h3"]
+    # the clamp must not turn measurement noise into detections: near-
+    # uniform small fleet stays clean (ratio guard vs the fleet median)
+    noisy = {f"h{i}": [0.10 + 0.004 * i] * 10 for i in range(4)}
+    with pytest.warns(RuntimeWarning):
+        assert detect_stragglers(noisy, z_threshold=3.0) == []
+    # sub-ceiling thresholds keep the pure z-score semantics, no warning
+    import warnings
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")
+        assert detect_stragglers(times, z_threshold=1.2) == ["h3"]
+
+
 def test_elastic_data_axis():
     assert elastic_data_axis(64, 4, model_parallel=16) == (16, 16)
     assert elastic_data_axis(63, 4, model_parallel=16) == (15, 16)

@@ -4,7 +4,7 @@ import jax.numpy as jnp
 import pytest
 
 from repro.core import generators as gen
-from repro.core.graph import HostGraph, build_ell, build_graph
+from repro.core.graph import HostGraph, build_graph
 
 
 def test_build_graph_padding_and_derived():

@@ -5,10 +5,11 @@ import numpy as np
 import pytest
 
 from conftest import assert_dist_equal
+from repro.analysis.trace_audit import assert_no_retrace
 from repro.core import generators as gen
 from repro.core.graph import HostGraph
 from repro.core.sssp.dynamic import DynamicSolver, make_delta
-from repro.core.sssp.landmarks import LandmarkIndex, seed_lower_bounds
+from repro.core.sssp.landmarks import LandmarkIndex
 from repro.core.sssp.reference import dijkstra
 from repro.sssp import SSSPConfig, Solver
 from repro.runtime.sssp_service import Query, SSSPService
@@ -157,17 +158,16 @@ def test_no_retrace_across_targets_and_seeds():
     index = LandmarkIndex(hg.to_device(), k=3, seed=0)
     solver = Solver(hg.to_device())
     solver.solve(0)
-    solver.solve(1, target=5)
-    solver.solve(2, target=9, C0=index.seed(2))
+    with assert_no_retrace(solver):
+        solver.solve(1, target=5)
+        solver.solve(2, target=9, C0=index.seed(2))
     assert solver.trace_count == 1, \
         "targeted/seeded/plain solves must share one compiled program"
-    before = solver.trace_count
-    solver.solve_batch([0, 1, 2, 3])
-    solver.solve_batch([4, 5, 6, 7], targets=[1, 2, 3, 4])
-    solver.solve_batch([0, 2, 4, 6], targets=[9, 9, 9, 9],
-                       C0=index.seed_batch([0, 2, 4, 6]))
-    assert solver.trace_count == before + 1, \
-        "one compile per batch shape, targeted or not"
+    with assert_no_retrace(solver, allow=1):
+        solver.solve_batch([0, 1, 2, 3])
+        solver.solve_batch([4, 5, 6, 7], targets=[1, 2, 3, 4])
+        solver.solve_batch([0, 2, 4, 6], targets=[9, 9, 9, 9],
+                           C0=index.seed_batch([0, 2, 4, 6]))
 
 
 def test_early_exit_ablatable_via_config():
@@ -190,12 +190,10 @@ def test_delta_stepping_no_retrace_across_sources():
     hg = _graph("gnp", n=100, seed=5)
     g = hg.to_device()
     ds.run_delta_stepping(g, 0)
-    base = ds.trace_count()
-    for s in (1, 2, 3, 4):
-        res = ds.run_delta_stepping(g, s)
-        assert_dist_equal(res.dist, dijkstra(hg, source=s).dist)
-    assert ds.trace_count() == base, \
-        "delta-stepping must not retrace per source"
+    with assert_no_retrace(ds):     # module-level counter convention
+        for s in (1, 2, 3, 4):
+            res = ds.run_delta_stepping(g, s)
+            assert_dist_equal(res.dist, dijkstra(hg, source=s).dist)
 
 
 def test_bellman_ford_no_retrace_across_sources():
@@ -203,12 +201,10 @@ def test_bellman_ford_no_retrace_across_sources():
     hg = _graph("gnp", n=100, seed=5)
     g = hg.to_device()
     bf.run_bellman_ford(g, 0)
-    base = bf.trace_count()
-    for s in (1, 2, 3, 4):
-        res = bf.run_bellman_ford(g, s)
-        assert_dist_equal(res.dist, dijkstra(hg, source=s).dist)
-    assert bf.trace_count() == base, \
-        "Bellman-Ford must not retrace per source"
+    with assert_no_retrace(bf):
+        for s in (1, 2, 3, 4):
+            res = bf.run_bellman_ford(g, s)
+            assert_dist_equal(res.dist, dijkstra(hg, source=s).dist)
 
 
 def test_ell_backend_never_routes_through_pallas(monkeypatch):
