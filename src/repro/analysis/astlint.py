@@ -43,6 +43,9 @@ TRACED_SCOPES: dict[str, tuple[str, ...]] = {
         "_round", "_cond", "_body", "_init_state", "_init_state_warm",
         "_solve", "_solve_warm", "_compact_frontier",
         "delta_taint_seeds", "delta_decrease_sources",
+        "_round_shared", "_chunked_apply", "_frontier_fixpoint",
+        "_attach_carries", "_strip_carries", "_warm_seed_mask",
+        "_solve_frontier", "_solve_warm_frontier",
     ),
     "src/repro/core/sssp/backends.py": (
         "relax", "relax2", "relax_frontier", "in_weight_nf",
@@ -52,8 +55,8 @@ TRACED_SCOPES: dict[str, tuple[str, ...]] = {
     "src/repro/core/sssp/solver.py": ("_one", "_batch"),
     "src/repro/core/sssp/dynamic.py": ("_warm_program",),
     "src/repro/core/sssp/bidirectional.py": ("program", "warm_program"),
-    "src/repro/core/sssp/fleet.py": ("_solve_one", "_solve_fleet",
-                                     "_batch_fleet", "_warm_fleet"),
+    "src/repro/core/sssp/fleet.py": ("solve_fleet", "solve_fleet_batch",
+                                     "warm_fleet"),
     "src/repro/core/sssp/distributed.py": ("solve_batch", "warm",
                                            "_shard_body"),
     "src/repro/kernels/ops.py": ("*",),
@@ -72,8 +75,8 @@ STATIC_BASES = frozenset({
 #: regardless of the base object's staticness (hashable aux_data).
 STATIC_ATTRS = frozenset({
     "n", "e", "e_pad", "n_pad", "num_segments", "max_out_deg",
-    "deg_pad", "size", "lanes", "frontier_cap", "cap", "interpret",
-    "shape", "ndim", "dtype", "n_seg",
+    "max_in_deg", "deg_pad", "size", "lanes", "frontier_cap", "cap",
+    "interpret", "shape", "ndim", "dtype", "n_seg",
 })
 
 _IGNORE_RE = re.compile(r"#\s*astlint:\s*ignore\[([a-z\-, ]+)\]")

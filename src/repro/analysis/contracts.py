@@ -16,14 +16,17 @@ Routes are dotted names like ``"segment.cold"``, ``"frontier.batched"``,
 ``"bidi.pair"``, ``"fleet.warm"``; specs select routes by ``fnmatch``
 patterns, so one spec can govern a family (``"*.warm"``).
 
-A violation that is *known and tolerated for now* — today, the
-batched/warm dense fallback of the frontier backend — is not silence
-and not a hard failure: it must match a :class:`Waiver` in
+A violation that is *known and tolerated for now* is not silence and
+not a hard failure: it must match a :class:`Waiver` in
 ``KNOWN_VIOLATIONS``, which turns the verdict into ``KNOWN_VIOLATION``
 and keeps CI green *until the waiver expires*.  Fixing the underlying
 gap makes the waiver unmatched (stale), which the gate also reports —
 so a fix forces the waiver's removal and the contract flips to a hard
-requirement forever.
+requirement forever.  The list is empty today; its worked example —
+the frontier backend's batched/warm routes ran the dense round body
+under vmap for two PRs, waived on ``require:cumsum`` until the shared
+batch frontier landed and retired both entries — is walked through in
+docs/contracts.md.
 """
 from __future__ import annotations
 
@@ -142,27 +145,7 @@ class Waiver:
 #: The repo's open, acknowledged gaps.  Keep this list SHORT: every
 #: entry is a named piece of technical debt with a deadline, surfaced
 #: in every contracts.json the gate writes.
-KNOWN_VIOLATIONS: tuple[Waiver, ...] = (
-    Waiver(
-        route="frontier.batched",
-        rule="require:cumsum",
-        reason="solve_batch runs the DENSE round body under vmap — the "
-               "overflow cond linearizes to select and the batched "
-               "gather/scatter relax measured 3-5x slower than segment "
-               "rounds; the shared per-batch frontier (ROADMAP) lifts "
-               "this.  Until then the sparse compaction is absent from "
-               "the batched program by design, not by accident.",
-        expires="2027-06-30",
-    ),
-    Waiver(
-        route="frontier.warm",
-        rule="require:cumsum",
-        reason="warm refresh is a batched path (vmapped over tracked "
-               "sources) and takes the same measured dense routing as "
-               "solve_batch; see the frontier.batched waiver.",
-        expires="2027-06-30",
-    ),
-)
+KNOWN_VIOLATIONS: tuple[Waiver, ...] = ()
 
 
 def match_waiver(route: str, rule: str,

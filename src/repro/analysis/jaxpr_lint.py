@@ -51,6 +51,7 @@ class PrimSite:
     in_cond: bool    # inside a while_loop cond specifically
     in_dims: tuple[tuple[int, ...], ...]   # shapes of array invars
     out_dtypes: tuple[str, ...]
+    out_dims: tuple[tuple[int, ...], ...] = ()  # shapes of array outvars
 
 
 def _sub_jaxprs(eqn) -> Iterator:
@@ -82,8 +83,11 @@ def walk_jaxpr(closed_jaxpr) -> list[PrimSite]:
             out_dtypes = tuple(
                 str(v.aval.dtype) for v in eqn.outvars
                 if hasattr(v.aval, "dtype"))
+            out_dims = tuple(
+                tuple(v.aval.shape) for v in eqn.outvars
+                if hasattr(v, "aval") and hasattr(v.aval, "shape"))
             sites.append(PrimSite(eqn.primitive.name, hot, in_cond,
-                                  in_dims, out_dtypes))
+                                  in_dims, out_dtypes, out_dims))
             if eqn.primitive.name == "while":
                 cond = eqn.params.get("cond_jaxpr")
                 body = eqn.params.get("body_jaxpr")
@@ -101,11 +105,23 @@ def walk_jaxpr(closed_jaxpr) -> list[PrimSite]:
 
 def dense_pass_count(sites: list[PrimSite],
                      dense_dims: frozenset[int]) -> int:
-    """Hot-region sweep eqns touching a full edge-layout dimension."""
-    return sum(
-        1 for s in sites
-        if s.hot and s.prim in SWEEP_PRIMS
-        and any(d in dense_dims for sh in s.in_dims for d in sh))
+    """Hot-region sweep eqns touching a full edge-layout dimension.
+
+    ``gather`` is judged by its OUTPUT shape: a gather only *sweeps* an
+    edge layout when it materializes an edge-sized result (the dense
+    relax reads ``x[src]`` producing ``[e_pad]``).  A sparse-frontier
+    CSR/CSC lookup also *indexes into* an ``[e_pad]`` table, but its
+    output is wavefront-sized (``[cap, max_out]``) — counting it would
+    charge the sparse route for the very memory traffic it avoids.
+    Scatter-class eqns and cumsum keep the input rule: a scatter's dense
+    cost is its operand/update stream, whatever the result shape.
+    """
+    def sweeps(s: PrimSite) -> bool:
+        dims = s.out_dims if s.prim == "gather" else s.in_dims
+        return any(d in dense_dims for sh in dims for d in sh)
+
+    return sum(1 for s in sites
+               if s.hot and s.prim in SWEEP_PRIMS and sweeps(s))
 
 
 @dataclasses.dataclass

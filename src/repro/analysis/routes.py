@@ -98,24 +98,27 @@ def build_routes(n: int = 48, e: int = 100, seed: int = 7,
         # is a traced operand) — they are linted as separate routes with
         # different contracts (targeted additionally requires the
         # early-exit predicate in the while cond).
+        # sparse_dims: wavefront-shaped gather widths of the frontier
+        # CSR/CSC walks — the collision guard below keeps them distinct
+        # from the edge-layout dims the dense-pass counter keys on.
+        sparse = ((sv.csr.max_out_deg, sv.csr.max_in_deg)
+                  if sv.csr is not None else ())
         cold = sv._jit_one.trace(sv.graph, sv.ell, sv.csr, s0, none_t,
                                  zeros1)
-        add(f"{backend}.cold", cold, dims)
+        add(f"{backend}.cold", cold, dims, sparse_dims=sparse)
         tgt = sv._jit_one.trace(sv.graph, sv.ell, sv.csr, s0, some_t,
                                 zeros1)
-        add(f"{backend}.targeted", tgt, dims)
-        # batched: the frontier backend passes csr=None here — the
-        # measured dense-under-vmap routing this PR turns from silence
-        # into an explicit waived KNOWN_VIOLATION.
-        csr_b = None if backend == "frontier" else sv.csr
-        batched = sv._jit_batch.trace(sv.graph, sv.ell, csr_b, srcB, tgtB,
+        add(f"{backend}.targeted", tgt, dims, sparse_dims=sparse)
+        batched = sv._jit_batch.trace(sv.graph, sv.ell, sv.csr, srcB, tgtB,
                                       zerosB)
-        add(f"{backend}.batched", batched, dims, batch=batch)
+        add(f"{backend}.batched", batched, dims, batch=batch,
+            sparse_dims=sparse)
         if backend != "pallas":  # pallas warm == ell warm program family
             dyn = DynamicSolver(g, backend=backend, **kw)
             warm = dyn._jit_warm.trace(dyn.graph, dyn.ell, dyn.csr,
                                        delta_for(dyn.graph), prevD, prevF)
-            add(f"{backend}.warm", warm, dims, tracked=2)
+            add(f"{backend}.warm", warm, dims, tracked=2,
+                sparse_dims=sparse)
 
     # --- distributed: shard_map programs (closure-traced) ------------
     if want("distributed.batched") or want("distributed.warm") \
@@ -154,33 +157,50 @@ def build_routes(n: int = 48, e: int = 100, seed: int = 7,
         add("bidi.warm", warm, {e_pad}, lanes=2)
 
     # --- fleet: [F] and [F, B] lane programs --------------------------
-    if any(want(f"fleet.{m}") for m in ("cold", "batched", "warm")):
+    fleet_modes = [f"{fam}.{m}" for fam in ("fleet", "fleet_frontier")
+                   for m in ("cold", "batched", "warm")]
+    if any(want(name) for name in fleet_modes):
         members = [(nn, src, dst, w),
                    (nn, src, dst, (w * 1.25).astype(np.float32))]
         fleet = build_fleet(members)
-        fs = FleetSolver(fleet)
         F = fleet.size
         fsrc = jnp.zeros((F,), jnp.int32)
         ftgt = jnp.full((F,), -1, jnp.int32)
         fc0 = jnp.zeros((F, nn), jnp.float32)
-        cold = fs._jit_solve.trace(fleet.g, fsrc, ftgt, fc0)
-        add("fleet.cold", cold, {fleet.e_pad}, fleet=F)
-        fb = fs._jit_batch.trace(
-            fleet.g, jnp.zeros((F, batch), jnp.int32),
-            jnp.full((F, batch), -1, jnp.int32),
-            jnp.zeros((F, batch, nn), jnp.float32))
-        add("fleet.batched", fb, {fleet.e_pad}, fleet=F, batch=batch)
-        sd2 = stack_deltas([delta_for(fleet.member(i)) for i in range(F)])
-        fw = fs._jit_warm.trace(fleet.g, sd2,
-                                jnp.zeros((F, nn), jnp.float32),
-                                jnp.zeros((F, nn), bool))
-        add("fleet.warm", fw, {fleet.e_pad}, fleet=F)
+        fsrcB = jnp.zeros((F, batch), jnp.int32)
+        ftgtB = jnp.full((F, batch), -1, jnp.int32)
+        fc0B = jnp.zeros((F, batch, nn), jnp.float32)
+        fD = jnp.zeros((F, nn), jnp.float32)
+        fF = jnp.zeros((F, nn), bool)
+        for fam, fs in (
+                ("fleet", FleetSolver(fleet)),
+                ("fleet_frontier", FleetSolver(
+                    fleet, backend="frontier", frontier_cap=frontier_cap))):
+            sparse = tuple(sorted({d for c in (fs.csrs or ())
+                                   for d in (c.max_out_deg, c.max_in_deg)}))
+            cold = fs._jit_solve.trace(fleet.g, fs.csrs, fsrc, ftgt, fc0)
+            add(f"{fam}.cold", cold, {fleet.e_pad}, fleet=F,
+                sparse_dims=sparse)
+            fb = fs._jit_batch.trace(fleet.g, fs.csrs, fsrcB, ftgtB, fc0B)
+            add(f"{fam}.batched", fb, {fleet.e_pad}, fleet=F, batch=batch,
+                sparse_dims=sparse)
+            sd2 = stack_deltas(
+                [delta_for(fleet.member(i)) for i in range(F)])
+            fw = fs._jit_warm.trace(fleet.g, fs.csrs, sd2, fD, fF)
+            add(f"{fam}.warm", fw, {fleet.e_pad}, fleet=F,
+                sparse_dims=sparse)
 
     # guard the dense-pass counter against dimension collisions: no
-    # vertex/batch/frontier dimension may equal an edge-layout dim.
+    # vertex/batch/frontier dimension may equal an edge-layout dim, and
+    # (frontier routes) no wavefront-shaped CSR/CSC gather width either
+    # — a collision would charge the sparse walk as a dense sweep.
     for r in routes.values():
         clash = r.dense_dims & {nn, nn + 1, batch, 2, frontier_cap}
         assert not clash, (
             f"probe sizes collide with edge dims for {r.name}: {clash} — "
             "adjust build_routes probe parameters")
+        clash = r.dense_dims & set(r.meta.get("sparse_dims", ()))
+        assert not clash, (
+            f"probe CSR degree bounds collide with edge dims for "
+            f"{r.name}: {clash} — adjust build_routes probe parameters")
     return routes

@@ -226,6 +226,15 @@ class CsrGraph:
     most ``cap * max_out_deg`` edge slots per round — wavefront-
     proportional, never graph-proportional.
 
+    ``in_indptr`` is the symmetric CSC run table: the primary ``Graph``
+    edge arrays are dst-sorted already, so vertex v's in-edges are the
+    contiguous run ``g.src/g.w[in_indptr[v] : in_indptr[v+1]]``.  No
+    second copy of the weights is needed — the CSC gathers read the
+    primary arrays, which ``Graph.apply_delta`` keeps current, so the
+    view is GraphDelta-coherent for free.  ``max_in_deg`` bounds the
+    per-vertex in-gather width for the incremental ``inWeight_nf`` and
+    cone C-propagation recomputes.
+
     Registered as a pytree (sizes static) so it rides through jit /
     ``lax.while_loop`` as a traced operand like ``Graph``/``EllGraph``.
     """
@@ -234,9 +243,11 @@ class CsrGraph:
     e: int = dataclasses.field(metadata=dict(static=True))
     e_pad: int = dataclasses.field(metadata=dict(static=True))
     max_out_deg: int = dataclasses.field(metadata=dict(static=True))
-    indptr: jax.Array  # int32[n + 1] out-edge run offsets (CSR)
-    dst: jax.Array     # int32[e_pad] src-sorted edge heads (padding: n)
-    w: jax.Array       # float32[e_pad] src-sorted weights (padding: inf)
+    max_in_deg: int = dataclasses.field(metadata=dict(static=True))
+    indptr: jax.Array    # int32[n + 1] out-edge run offsets (CSR)
+    dst: jax.Array       # int32[e_pad] src-sorted edge heads (padding: n)
+    w: jax.Array         # float32[e_pad] src-sorted weights (padding: inf)
+    in_indptr: jax.Array  # int32[n + 1] in-edge run offsets into g.src/g.w
 
     def apply_delta(self, delta) -> "CsrGraph":
         """The same weight updates ``Graph.apply_delta`` applies, landed
@@ -264,13 +275,18 @@ def build_csr(g: Graph) -> CsrGraph:
     out_deg = np.bincount(src, minlength=g.n).astype(np.int64)
     indptr = np.zeros(g.n + 1, np.int32)
     np.cumsum(out_deg, out=indptr[1:])
+    in_deg = np.bincount(dst, minlength=g.n).astype(np.int64)
+    in_indptr = np.zeros(g.n + 1, np.int32)
+    np.cumsum(in_deg, out=in_indptr[1:])
     return CsrGraph(
         n=g.n, e=e, e_pad=g.e_pad,
         max_out_deg=max(int(out_deg.max()) if e else 0, 1),
+        max_in_deg=max(int(in_deg.max()) if e else 0, 1),
         indptr=jnp.asarray(indptr),
         dst=jnp.asarray(_pad_to(dst[order].astype(np.int32), g.e_pad, g.n)),
         w=jnp.asarray(_pad_to(w[order].astype(np.float32), g.e_pad,
-                              np.inf)))
+                              np.inf)),
+        in_indptr=jnp.asarray(in_indptr))
 
 
 @jax.tree_util.register_dataclass

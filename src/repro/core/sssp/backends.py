@@ -61,6 +61,18 @@ class Primitives:
     relax2: Callable | None = None  # optional fused (relax, in_weight_nf)
     relax_frontier: Callable | None = None  # optional sparse step-1 relax
     frontier_cap: int = 0           # static frontier-buffer size (0 = dense)
+    # --- shared-batch-frontier hooks (engine._round_shared; setting
+    # relax_frontier_b routes every Solver/Dynamic/Fleet solve — single
+    # or batched — through the batch-aware sparse round body) ---
+    relax_frontier_b: Callable | None = None  # (x[B,n], f_idx[cap],
+    #   src_mask[B,n]) -> [B,n]: ONE shared gather of the union
+    #   frontier's out-edges, per-lane scatter-min.
+    out_nbrs: Callable | None = None  # (idx[cap]) -> int32[cap, max_out]
+    #   shared cone-target table of one maintenance chunk (padding n).
+    in_min_at: Callable | None = None  # (x[B,n]|None, tgt, mask[B,n]|None)
+    #   -> [B, *tgt.shape]: full in-neighbourhood masked min per target
+    #   over the CSC view — the incremental inWeight_nf / c_fix /
+    #   Eqn-(1) recompute primitive.
 
 
 def _masked_min_local(x: jax.Array, mask: jax.Array) -> jax.Array:
@@ -139,15 +151,18 @@ def ell_prims(g: Graph, ell: EllGraph, use_pallas: bool) -> Primitives:
     "backend.frontier",
     routes=("frontier.*",),
     require=("cumsum", "scatter-min"),
-    dense_budget={"frontier.cold": 10, "frontier.targeted": 10,
-                  "frontier.batched": 8, "frontier.warm": 11},
+    dense_budget={"frontier.cold": 3, "frontier.targeted": 3,
+                  "frontier.batched": 3, "frontier.warm": 6},
     notes="The whole point of this backend is the compacted sparse "
           "relax: the program must contain the cumsum frontier "
-          "compaction AND the scatter-min relax.  Today the batched "
-          "and warm paths run the dense round body under vmap — the "
-          "missing cumsum there is the ROADMAP's headline gap, waived "
-          "as a KNOWN_VIOLATION in contracts.KNOWN_VIOLATIONS (with "
-          "expiry) instead of silently tolerated.")
+          "compaction AND the scatter-min relax — on EVERY route, "
+          "batched and warm included (the shared batch frontier of "
+          "engine._round_shared; the old dense-under-vmap waiver is "
+          "retired).  The budgets count only the step-1 dense-relax "
+          "fallback branch and the warm taint sweep: inWeight_nf and "
+          "C-propagation are incremental chunked updates with NO dense "
+          "rebuild anywhere in the compiled program "
+          "(docs/round-anatomy.md).")
 def frontier_prims(g: Graph, csr: CsrGraph, cap: int,
                    use_pallas: bool = False) -> Primitives:
     """Sparse-frontier backend: compacted-buffer relax over the CSR view.
@@ -156,10 +171,13 @@ def frontier_prims(g: Graph, csr: CsrGraph, cap: int,
     ``cap``) buffered vertices — ``cap * csr.max_out_deg`` edge slots
     instead of ``e_pad`` — through the Pallas scatter-min kernel
     (kernels/frontier_relax) when ``use_pallas``, the jnp oracle
-    otherwise.  The dense primitives stay segment ops: they serve the
-    full-vertex-set reductions (inWeight_nf, C-propagation) and the
-    overflow-fallback rounds, which keeps every round bitwise-identical
-    to the segment backend.
+    otherwise.  The batched hooks (``relax_frontier_b`` / ``out_nbrs``
+    / ``in_min_at``) switch the engine to ``_round_shared``: one UNION
+    frontier per batch, incremental inWeight_nf and cone-bounded
+    C-propagation over the CSC run table — every pass
+    wavefront-proportional.  The dense segment primitives remain as the
+    step-1 overflow fallback and the init-region seeds, which keeps
+    every round bitwise-identical to the segment backend.
     """
     from repro.kernels import ops
 
@@ -169,10 +187,22 @@ def frontier_prims(g: Graph, csr: CsrGraph, cap: int,
         return ops.frontier_relax(x, csr, f_idx, src_mask,
                                   use_pallas=use_pallas)
 
+    def relax_frontier_b(x, f_idx, src_mask):
+        return ops.frontier_relax_b(x, csr, f_idx, src_mask,
+                                    use_pallas=use_pallas)
+
+    def out_nbrs(idx):
+        return ops.out_nbrs(csr, idx)
+
+    def in_min_at(x, tgt, src_mask):
+        return ops.in_min_at(g, csr, x, tgt, src_mask)
+
     return Primitives(relax=base.relax, in_weight_nf=base.in_weight_nf,
                       masked_min=_masked_min_local,
                       relax_frontier=relax_frontier,
-                      frontier_cap=int(cap))
+                      frontier_cap=int(cap),
+                      relax_frontier_b=relax_frontier_b,
+                      out_nbrs=out_nbrs, in_min_at=in_min_at)
 
 
 @contract(

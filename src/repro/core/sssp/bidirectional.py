@@ -248,11 +248,14 @@ class BidirectionalSolver:
                 graph.n if frontier_cap is None else max(1, int(frontier_cap)))
             csr_f, csr_b = graph.csr(), rgraph.csr()
             # the lanes' CSR views stack into one vmapped operand, so
-            # their static gather width must agree — the max is safe
+            # their static gather widths must agree — the max is safe
             # (extra slots gather padding) and keeps one compiled kernel.
             wide = max(csr_f.max_out_deg, csr_b.max_out_deg)
-            self._csr_f = dataclasses.replace(csr_f, max_out_deg=wide)
-            self._csr_b = dataclasses.replace(csr_b, max_out_deg=wide)
+            wide_in = max(csr_f.max_in_deg, csr_b.max_in_deg)
+            self._csr_f = dataclasses.replace(
+                csr_f, max_out_deg=wide, max_in_deg=wide_in)
+            self._csr_b = dataclasses.replace(
+                csr_b, max_out_deg=wide, max_in_deg=wide_in)
         self._restack()
 
         cap, use_pallas = self.frontier_cap, cfg.use_pallas

@@ -55,6 +55,8 @@ from repro.analysis.contracts import contract
 from repro.core.graph import Graph
 from repro.core.sssp.engine import (SP4_CONFIG, SSSPConfig, SSSPResult,
                                     _fixed_by_dict, _solve_warm,
+                                    _solve_warm_frontier,
+                                    delta_decrease_sources,
                                     delta_taint_seeds)
 from repro.core.sssp.solver import Solver, SSSPBatchResult, _next_pow2
 
@@ -292,20 +294,30 @@ class DynamicSolver(Solver):
         """(g_old, delta, [B,n] prev states) -> (g_new, layouts, states).
 
         Taint seeds are per-source (tightness is a property of each
-        source's distance field); the graph mutation is shared.  The
-        CSR view (frontier backend) is delta-updated here for coherence
-        with later unbatched solves, but the warm rounds themselves run
-        the DENSE body (``prims`` built without csr): the refresh batch
-        is vmapped, where the sparse path's overflow cond linearizes to
-        select and the batched gather/scatter relax measures slower
-        than the segment round (see ``Solver.solve_batch``).  Warm
-        results stay bitwise-identical either way.
+        source's distance field); the graph mutation is shared.  On the
+        frontier backend the refresh batch goes straight into the
+        batch-aware warm driver (``engine._solve_warm_frontier``) — NOT
+        ``jax.vmap`` over per-lane solves, which would batch the
+        overflow predicates and linearize the sparse/dense cond to
+        select.  The lanes share one union-compacted seed frontier and
+        the decreased-edge sources narrow it (``delta_decrease_sources``
+        — shared: decrease-ness is a property of the delta, not of any
+        lane).  Warm results stay bitwise-identical to the dense body.
         """
         self._count_warm_trace()
         g_new = g_old.apply_delta(delta)
         ell_new = None if ell_old is None else ell_old.apply_delta(delta)
         csr_new = None if csr_old is None else csr_old.apply_delta(delta)
-        prims = self._make_prims(g_new, ell_new, None)
+        prims = self._make_prims(g_new, ell_new, csr_new)
+        if getattr(prims, "relax_frontier_b", None) is not None:
+            seeds, pure = jax.vmap(
+                lambda D0: delta_taint_seeds(g_old, delta, D0))(prev_D)
+            dec = delta_decrease_sources(g_old, delta)
+            states, sweeps, taint = _solve_warm_frontier(
+                g_new, self.cfg, prev_D, prev_fixed, seeds, pure, prims,
+                dec_src=dec)
+            return (g_new, ell_new, csr_new, states, sweeps,
+                    jnp.sum(taint, axis=1))
 
         def one(D0, f0):
             seeds, pure = delta_taint_seeds(g_old, delta, D0)

@@ -105,6 +105,18 @@ class SSSPState:
     #   The physical gather of a sparse round touches up to
     #   cap * max_out_deg padded slots regardless of how many are live —
     #   the bench reports that bound separately (slot_ratio).
+    # --- shared-batch-frontier carries (engine-internal state of
+    # ``_round_shared``; None on every other path) ---
+    in_w_nf: jax.Array | None = None  # float32[B, n] incremental
+    #   inWeight_nf: min in-edge weight over NON-fixed sources, valid for
+    #   this round-start ``fixed``; refreshed end-of-round only at the
+    #   out-neighbourhoods of vertices whose fixed bit flipped.
+    c_fix: jax.Array | None = None  # float32[B, n] min over FIXED
+    #   in-sources u of D[u] + w — the fixed-source half of the Eqn-(1)
+    #   C-propagation input, maintained over the same flip cones.
+    cfix_stale: jax.Array | None = None  # bool[B, n] sources whose fixed
+    #   bit flipped AFTER the last c_fix maintenance (lb fixes of the
+    #   previous round; warm un-fixes join at the next round's step 1).
 
 
 @dataclasses.dataclass
@@ -271,6 +283,20 @@ def delta_decrease_sources(g_old: Graph, delta) -> jax.Array:
     return jnp.zeros((g_old.n,), bool).at[at].set(True, mode="drop")
 
 
+def _warm_seed_mask(g: Graph, taint: jax.Array, fixed: jax.Array,
+                    D: jax.Array, dec_src: jax.Array | None) -> jax.Array:
+    """Fixed vertices whose warm round-1 out-edge offers are NOT already
+    folded into the warm state: the taint cone's in-boundary plus tails
+    of decreased delta edges (see ``_init_state_warm``).  ``dec_src=None``
+    degrades to seeding every surviving fixed vertex — still exact."""
+    if dec_src is None:
+        return fixed & (D < INF)
+    # in-boundary of the cone: fixed tails of edges into taint
+    at = jnp.where(g.gather_dst(taint, fill=False), g.src, g.n)
+    bnd = jnp.zeros((g.n,), bool).at[at].set(True, mode="drop")
+    return (bnd | dec_src) & fixed & (D < INF)
+
+
 def _init_state_warm(g: Graph, prev_D: jax.Array, prev_fixed: jax.Array,
                      seeds: jax.Array, pure_increase: jax.Array,
                      prims: backends.Primitives | None = None,
@@ -342,13 +368,7 @@ def _init_state_warm(g: Graph, prev_D: jax.Array, prev_fixed: jax.Array,
     cap = _frontier_cap(prims)
     f_idx = f_cnt = edges = None
     if cap:
-        if dec_src is None:
-            seed_mask = fixed & (D < INF)
-        else:
-            # in-boundary of the cone: fixed tails of edges into taint
-            at = jnp.where(g.gather_dst(taint, fill=False), g.src, g.n)
-            bnd = jnp.zeros((g.n,), bool).at[at].set(True, mode="drop")
-            seed_mask = (bnd | dec_src) & fixed & (D < INF)
+        seed_mask = _warm_seed_mask(g, taint, fixed, D, dec_src)
         f_idx, f_cnt = _compact_frontier(seed_mask, cap, g.n)
         edges = jnp.int32(0)
     state = SSSPState(D=D, C=C, fixed=fixed,
@@ -368,7 +388,18 @@ def _solve_warm(g: Graph, cfg: SSSPConfig, prev_D, prev_fixed, seeds,
     doubled vs cold: un-fix-on-improve can transiently re-open vertices,
     so net-fixes-per-round is no longer >= 1 (termination itself is
     guaranteed by per-vertex monotone D).  Returns (state, sweeps, taint).
+
+    Batch-capable frontier ``prims`` (``relax_frontier_b`` set) route to
+    the shared-frontier driver at B=1 — warm rounds then run the same
+    sparse round body (incremental inWeight_nf, cone C-propagation) as
+    warm *batches* do, instead of the dense body.
     """
+    if getattr(prims, "relax_frontier_b", None) is not None:
+        st, sweeps, taint = _solve_warm_frontier(
+            g, cfg, prev_D[None], prev_fixed[None], seeds[None],
+            jnp.asarray(pure_increase).reshape((1,)), prims,
+            dec_src=dec_src)
+        return jax.tree.map(lambda x: x[0], st), sweeps[0], taint[0]
     state, sweeps, taint = _init_state_warm(
         g, prev_D, prev_fixed, seeds, pure_increase, prims, dec_src)
     max_rounds = (2 * cfg.max_rounds) if cfg.max_rounds else 2 * g.n + 4
@@ -422,9 +453,14 @@ def _round(g: Graph, cfg: SSSPConfig, state: SSSPState,
     vertices whose offers are new (see the frontier-maintenance block at
     the end).  Everything a repeated offer could touch is monotone-min,
     so skipping value-identical repeats is bitwise-neutral; on overflow
-    (``f_cnt > cap``) the round falls back to the dense relax.  The
-    other reductions (inWeight_nf, C-propagation, minD) stay dense —
-    they are full-vertex-set properties, not wavefront properties.
+    (``f_cnt > cap``) the round falls back to the dense relax.  In THIS
+    legacy single-lane body the other reductions (inWeight_nf,
+    C-propagation, minD) stay dense; it survives for callers that vmap
+    the round directly over their own lanes (bidirectional.py's two-lane
+    program, whose ``cap >= n`` keeps the sparse branch static).  Every
+    Solver/Dynamic/Fleet frontier route instead takes ``_round_shared``
+    below, where those passes are wavefront-proportional too (see
+    docs/round-anatomy.md).
     """
     if prims is None:
         prims = backends.segment_prims(g)
@@ -571,6 +607,355 @@ def _round(g: Graph, cfg: SSSPConfig, state: SSSPState,
         f_idx=f_idx, f_cnt=f_cnt, edges=edges)
 
 
+def _chunked_apply(apply_chunk, idx: jax.Array, cnt: jax.Array, cap: int,
+                   carry):
+    """Fold ``apply_chunk(chunk int32[cap], carry) -> carry`` over
+    ``cap``-sized chunks of a full compacted index list ``idx``
+    (int32[n], padding n) until ``cnt`` entries are consumed.
+
+    This is how the incremental inWeight_nf / c_fix / cone-propagation
+    updates stay wavefront-proportional WITHOUT a dense fallback branch:
+    a round pays ``ceil(cnt / cap)`` chunk sweeps under a
+    ``lax.while_loop`` — never a full-``e_pad`` pass, and no dense
+    rebuild ever appears in the compiled program.  Chunks partition the
+    target set, and every chunk's updates are full recomputes at its
+    targets (order-independent), so chunking is bitwise-neutral.
+    """
+    n = idx.shape[0]
+    idx_pad = jnp.concatenate([idx, jnp.full((cap,), n, idx.dtype)])
+
+    def cond(c):
+        return c[0] < cnt
+
+    def body(c):
+        start, cur = c
+        chunk = jax.lax.dynamic_slice(idx_pad, (start,), (cap,))
+        return start + jnp.int32(cap), apply_chunk(chunk, cur)
+
+    _, carry = jax.lax.while_loop(cond, body, (jnp.int32(0), carry))
+    return carry
+
+
+def _round_shared(g: Graph, cfg: SSSPConfig, state: SSSPState,
+                  f_idx: jax.Array, f_cnt: jax.Array,
+                  prims: backends.Primitives, warm: bool = False):
+    """One bulk-synchronous round over ``[B, n]`` lanes sharing ONE
+    compacted union frontier — the batch-aware sibling of ``_round``.
+
+    Same rules, same ordering, bitwise-identical per-lane results; the
+    differences are purely in how each pass is executed:
+
+    * **Step-1 relax** gathers the shared buffer ``f_idx`` (the union of
+      every lane's fresh vertices) once and scatter-mins per lane
+      (``prims.relax_frontier_b``).  A union vertex that is not fresh
+      for some lane only re-sends offers that lane already min-folded —
+      value-identical, hence bitwise-neutral.  The overflow predicate is
+      a SCALAR (one shared count), so the dense fallback stays a real
+      ``lax.cond`` branch even though the lanes are batched — the exact
+      failure mode of vmapping ``_round`` (batched predicate -> select
+      -> both branches every round) that this body exists to avoid.
+    * **inWeight_nf** is an incremental carry (``state.in_w_nf``): valid
+      for round-start ``fixed`` by induction, refreshed end-of-round
+      only at out-neighbours of vertices whose fixed bit flipped
+      (full in-neighbourhood recompute per target via ``prims.in_min_at``
+      — a min is order-independent, so recompute-at-a-superset is exact).
+    * **C-propagation** is cone-bounded: ``c_fix`` carries the
+      fixed-source half ``min_{u fixed} D[u] + w``; non-cone vertices
+      get the closed form ``max(C, min(c_fix, minD + inWeight_nf))``
+      (their non-fixed in-sources all sit exactly at ``C == minD`` after
+      the Lemma-7 lift, and their in-sources' fixed bits are unchanged —
+      both guaranteed by routing every violator through the cone), and
+      cone vertices — out-neighbours of flipped-bit sources and of
+      sources with ``C > minD`` — get a full Eqn-(1) recompute.
+    * The three maintenance sweeps run through ``_chunked_apply``:
+      wavefront-proportional with NO dense branch in the program at all.
+
+    Returns ``(state, fresh)`` with ``fresh`` the per-lane bool[B, n]
+    next-round frontier mask; the driver unions it, compacts once, and
+    select-freezes finished lanes (mirroring ``vmap``-of-``while_loop``
+    batching semantics so per-lane round counts stay bitwise).
+    """
+    D, C, fixed = state.D, state.C, state.fixed          # [B, n]
+    cap = prims.frontier_cap
+    B = D.shape[0]
+    if cfg.label_correcting:
+        relax_src = D < INF
+    else:
+        relax_src = fixed
+
+    # --- Step 1: shared-buffer D relaxation --------------------------
+    if cap >= g.n:
+        overflow = jnp.bool_(False)
+        D_relax = prims.relax_frontier_b(D, f_idx, relax_src)
+    else:
+        overflow = f_cnt > cap     # scalar: a real branch under batching
+        D_relax = jax.lax.cond(
+            overflow,
+            lambda: jax.vmap(prims.relax)(D, relax_src),
+            lambda: prims.relax_frontier_b(D, f_idx, relax_src))
+    u = jnp.minimum(f_idx, g.n - 1)
+    live = (f_idx < g.n)[None, :] & relax_src[:, u]
+    sparse_edges = jnp.sum(jnp.where(live, g.out_deg[u][None, :], 0),
+                           axis=1, dtype=jnp.int32)
+    edges = state.edges + jnp.where(overflow, jnp.int32(g.e_pad),
+                                    sparse_edges)
+
+    in_w_nf = state.in_w_nf   # invariant: == in_weight_nf(~round-start fixed)
+    cfix_stale = state.cfix_stale
+    if warm:
+        improved = fixed & (D_relax < D)
+        fixed = fixed & ~improved
+        C = jnp.where(improved, 0.0, C)
+        if cfix_stale is not None:
+            # an un-fixed vertex leaves the fixed-source set (and its D
+            # is about to drop): its out-neighbours' c_fix is stale.
+            cfix_stale = cfix_stale | improved
+    D = jnp.where(~fixed, jnp.minimum(D, D_relax), D)
+    explored = fixed
+
+    discovered = D < INF
+    active = discovered & ~fixed
+
+    # --- Step 2: per-lane reductions + fixing rules ------------------
+    minD = jax.vmap(prims.masked_min)(D, active)          # [B]
+    new_fix = jnp.zeros_like(fixed)
+    rule_counts = []
+
+    def count(mask):
+        rule_counts.append(jnp.sum(mask & active & ~new_fix, axis=1,
+                                   dtype=jnp.int32))
+        return mask
+
+    if "min" in cfg.rules:
+        new_fix = new_fix | count(active & (D <= minD[:, None]))
+    else:
+        rule_counts.append(jnp.zeros((B,), jnp.int32))
+    if "pred" in cfg.rules:
+        has_nf_pred = ~jnp.isinf(in_w_nf)
+        new_fix = new_fix | count(active & ~has_nf_pred)
+    else:
+        rule_counts.append(jnp.zeros((B,), jnp.int32))
+    if "in" in cfg.rules:
+        new_fix = new_fix | count(active & (D <= minD[:, None] + in_w_nf))
+    else:
+        rule_counts.append(jnp.zeros((B,), jnp.int32))
+    if "out" in cfg.rules:
+        threshold = jax.vmap(prims.masked_min)(
+            D + g.out_weight[None, :], active)
+        new_fix = new_fix | count(active & (D <= threshold[:, None]))
+    else:
+        rule_counts.append(jnp.zeros((B,), jnp.int32))
+
+    fixed1 = fixed | new_fix
+
+    # --- Step 3: cone-bounded C update (Lemma 7 lift + Eqn (1)) ------
+    if "lb" in cfg.rules:
+        # (a) c_fix maintenance: recompute at out-neighbours of every
+        # source whose fixed bit flipped since the last maintenance.
+        stale_src = cfix_stale | new_fix
+        s_idx, s_cnt = _compact_frontier(
+            jnp.any(stale_src, axis=0), g.n, g.n)
+        c_fix = state.c_fix
+
+        def cfix_chunk(chunk, cf):
+            tgts = prims.out_nbrs(chunk)            # [cap, max_out]
+            vals = prims.in_min_at(D, tgts, fixed1)  # [B, cap, max_out]
+            return cf.at[:, tgts].set(vals, mode="drop")
+
+        c_fix = _chunked_apply(cfix_chunk, s_idx, s_cnt, cap, c_fix)
+
+        # (b) lift, then propagate lower bounds through the cone only
+        C = jnp.where(fixed1, D, jnp.maximum(C, minD[:, None]))
+        for _ in range(cfg.c_prop_iters):
+            prop_src = stale_src | (~fixed1 & (C > minD[:, None]))
+            p_idx, p_cnt = _compact_frontier(
+                jnp.any(prop_src, axis=0), g.n, g.n)
+            # non-cone closed form (exact off the cone — see docstring)
+            base = jnp.minimum(c_fix, minD[:, None] + in_w_nf)
+            C_new = jnp.where(~fixed1, jnp.maximum(C, base), C)
+            C_pre = C
+
+            def prop_chunk(chunk, cn, C_pre=C_pre):
+                tgts = prims.out_nbrs(chunk)
+                cin = prims.in_min_at(C_pre, tgts, None)  # all sources
+                tc = jnp.minimum(tgts, g.n - 1)
+                cur = C_pre[:, tc]
+                upd = ~fixed1[:, tc] & (tgts < g.n)[None]
+                val = jnp.where(upd, jnp.maximum(cur, cin), cur)
+                return cn.at[:, tgts].set(val, mode="drop")
+
+            C = _chunked_apply(prop_chunk, p_idx, p_cnt, cap, C_new)
+
+        fix_lb = ~fixed1 & discovered & (C >= D)
+        rule_counts.append(jnp.sum(fix_lb, axis=1, dtype=jnp.int32))
+        fixed2 = fixed1 | fix_lb
+        C = jnp.where(fixed2, D, C)
+        cfix_stale = fix_lb   # applied at the NEXT round's maintenance
+    else:
+        rule_counts.append(jnp.zeros((B,), jnp.int32))
+        fixed2 = fixed1
+        C = jnp.where(fixed2, D, C)
+        c_fix = state.c_fix
+
+    # --- incremental inWeight_nf refresh (restores the invariant for
+    # the next round's round-start fixed = fixed2) --------------------
+    if in_w_nf is not None:
+        stale2 = state.fixed ^ fixed2     # every bit flip this round
+        w_idx, w_cnt = _compact_frontier(
+            jnp.any(stale2, axis=0), g.n, g.n)
+
+        def inw_chunk(chunk, iw):
+            tgts = prims.out_nbrs(chunk)
+            vals = prims.in_min_at(None, tgts, ~fixed2)   # min weight
+            return iw.at[:, tgts].set(vals, mode="drop")
+
+        in_w_nf = _chunked_apply(inw_chunk, w_idx, w_cnt, cap, in_w_nf)
+
+    # --- next-round frontier mask (same freshness law as ``_round``) -
+    if cfg.label_correcting:
+        fresh = D != state.D
+    else:
+        fresh = fixed2 & (~state.fixed | (D != state.D))
+    new_state = SSSPState(
+        D=D, C=C, fixed=fixed2, explored=explored,
+        round=state.round + 1,
+        fixed_by=state.fixed_by + jnp.stack(rule_counts, axis=-1),
+        f_idx=None, f_cnt=None, edges=edges,
+        in_w_nf=in_w_nf, c_fix=c_fix, cfix_stale=cfix_stale)
+    return new_state, fresh
+
+
+def _attach_carries(g: Graph, cfg: SSSPConfig, prims, state: SSSPState):
+    """Seed the shared-frontier round carries onto a freshly-initialized
+    ``[B, n]`` state.  These are init-region dense reductions — they run
+    ONCE per solve, outside the round loop, which is why the hot-region
+    dense-pass budgets don't see them."""
+    B = state.D.shape[0]
+    need_inw = (("in" in cfg.rules) or ("pred" in cfg.rules)
+                or ("lb" in cfg.rules))
+    use_lb = "lb" in cfg.rules
+    in_w_nf = jax.vmap(prims.in_weight_nf)(~state.fixed) if need_inw else None
+    c_fix = jax.vmap(prims.relax)(state.D, state.fixed) if use_lb else None
+    cfix_stale = jnp.zeros_like(state.fixed) if use_lb else None
+    return dataclasses.replace(
+        state, f_idx=None, f_cnt=None,
+        edges=jnp.zeros((B,), jnp.int32),
+        in_w_nf=in_w_nf, c_fix=c_fix, cfix_stale=cfix_stale)
+
+
+def _strip_carries(state: SSSPState) -> SSSPState:
+    return dataclasses.replace(state, in_w_nf=None, c_fix=None,
+                               cfix_stale=None)
+
+
+def _frontier_fixpoint(g: Graph, cfg: SSSPConfig, prims,
+                       state: SSSPState, f_idx: jax.Array, f_cnt: jax.Array,
+                       max_rounds: int, targets=None,
+                       warm: bool = False) -> SSSPState:
+    """Shared-frontier ``while_loop`` driver over ``[B, n]`` lanes.
+
+    The carry is ``(state, f_idx, f_cnt)`` with the frontier buffer
+    SHARED (one union compaction and one gather per round).  Lane
+    liveness replicates exactly what ``vmap`` does to a batched
+    ``while_loop`` — run while ANY lane's ``_cond`` holds, select-freeze
+    the carries of finished lanes — so per-lane rounds, fixed_by, and
+    targeted early exit are bitwise-identical to the vmapped dense path.
+    """
+    B = state.D.shape[0]
+    cap = prims.frontier_cap
+
+    def lane_go(st):
+        active = (st.D < INF) & ~st.fixed
+        pending = st.fixed & ~st.explored
+        go = ((jnp.any(active, axis=1) | jnp.any(pending, axis=1))
+              & (st.round < max_rounds))
+        if targets is not None:
+            t = jnp.maximum(targets, 0)
+            lanes = jnp.arange(B)
+            t_done = ((targets >= 0) & st.fixed[lanes, t]
+                      & st.explored[lanes, t])
+            go = go & ~t_done
+        return go
+
+    def cond(carry):
+        st, _, _ = carry
+        return jnp.any(lane_go(st))
+
+    def body(carry):
+        st, fi, fc = carry
+        go = lane_go(st)
+        st2, fresh = _round_shared(g, cfg, st, fi, fc, prims, warm=warm)
+
+        def sel(new, old):
+            keep = go.reshape((B,) + (1,) * (new.ndim - 1))
+            return jnp.where(keep, new, old)
+
+        st3 = jax.tree.map(sel, st2, st)
+        union = jnp.any(fresh & go[:, None], axis=0)
+        nfi, nfc = _compact_frontier(union, cap, g.n)
+        return st3, nfi, nfc
+
+    state, _, _ = jax.lax.while_loop(cond, body, (state, f_idx, f_cnt))
+    return state
+
+
+def _solve_frontier(g: Graph, cfg: SSSPConfig, sources: jax.Array,
+                    prims, C0=None, targets=None) -> SSSPState:
+    """Batched frontier solve: B lanes, ONE shared union frontier.
+
+    ``sources`` int32[B]; ``C0`` float32[B, n] or None; ``targets``
+    int32[B] (sentinel -1 = untargeted lane) or None.  Returns a state
+    with [B, ...] leaves, engine-internal carries stripped.  The initial
+    buffer is the union of the lane sources — label-setting round 1
+    relaxes nothing, and label-correcting lanes mask foreign sources out
+    via ``relax_src``, so the union seed is bitwise-neutral.
+    """
+    cap = prims.frontier_cap
+    if C0 is None:
+        state = jax.vmap(lambda s: _init_state(g, s))(sources)
+    else:
+        state = jax.vmap(lambda s, c: _init_state(g, s, c))(sources, C0)
+    state = _attach_carries(g, cfg, prims, state)
+    src_mask = jnp.zeros((g.n,), bool).at[sources].set(True)
+    f_idx, f_cnt = _compact_frontier(src_mask, cap, g.n)
+    max_rounds = cfg.max_rounds or g.n + 2
+    tgt = targets if cfg.early_exit else None
+    state = _frontier_fixpoint(g, cfg, prims, state, f_idx, f_cnt,
+                               max_rounds, targets=tgt)
+    return _strip_carries(state)
+
+
+def _solve_warm_frontier(g: Graph, cfg: SSSPConfig, prev_D, prev_fixed,
+                         seeds, pure_increase, prims, dec_src=None):
+    """Batched warm re-solve on the shared union frontier.
+
+    Per-lane taint cones and warm states come from the same
+    ``_init_state_warm`` the dense path uses (vmapped, minus its
+    frontier seeding); the shared buffer seeds from the UNION of the
+    per-lane ``_warm_seed_mask``s — a superset of each lane's seed set,
+    and every extra vertex is a fixed one whose offers that lane already
+    folded (no-op under min), so round 1 stays bitwise.  ``dec_src`` is
+    lane-independent (tails of decreased delta edges).  Returns
+    ``(state, sweeps int32[B], taint bool[B, n])``.
+    """
+    cap = prims.frontier_cap
+
+    def init_one(D0, F0, sd, pure):
+        return _init_state_warm(g, D0, F0, sd, pure, None, None)
+
+    state, sweeps, taint = jax.vmap(init_one)(
+        prev_D, prev_fixed, seeds, pure_increase)
+    state = _attach_carries(g, cfg, prims, state)
+    seed = jax.vmap(
+        lambda t, f, d: _warm_seed_mask(g, t, f, d, dec_src))(
+            taint, state.fixed, state.D)
+    f_idx, f_cnt = _compact_frontier(jnp.any(seed, axis=0), cap, g.n)
+    max_rounds = (2 * cfg.max_rounds) if cfg.max_rounds else 2 * g.n + 4
+    state = _frontier_fixpoint(g, cfg, prims, state, f_idx, f_cnt,
+                               max_rounds, warm=True)
+    return _strip_carries(state), sweeps, taint
+
+
 def _cond(state: SSSPState, max_rounds: int, target=None):
     """Keep-going predicate.  ``target`` (python None, or an int32 scalar
     with sentinel ``-1`` = none, possibly traced) enables goal-directed
@@ -593,7 +978,19 @@ def _solve(g: Graph, cfg: SSSPConfig, source,
            prims: backends.Primitives | None = None,
            C0=None, target=None) -> SSSPState:
     """while_loop to fixpoint (or to ``target`` fixed, when given);
-    ``source``/``target``/``C0`` may all be traced (vmap-able)."""
+    ``source``/``target``/``C0`` may all be traced (vmap-able).
+
+    Batch-capable frontier ``prims`` (``relax_frontier_b`` set) route to
+    the shared-frontier driver at B=1: single solves then run the very
+    round body batches run — incremental inWeight_nf, cone-bounded
+    C-propagation — not just the sparse relax."""
+    if getattr(prims, "relax_frontier_b", None) is not None:
+        src = jnp.asarray(source, jnp.int32).reshape((1,))
+        c0 = None if C0 is None else C0.reshape((1, -1))
+        tgt = (None if target is None
+               else jnp.asarray(target, jnp.int32).reshape((1,)))
+        st = _solve_frontier(g, cfg, src, prims, C0=c0, targets=tgt)
+        return jax.tree.map(lambda x: x[0], st)
     state = _init_state(g, source, C0, prims)
     max_rounds = cfg.max_rounds or g.n + 2
     tgt = target if cfg.early_exit else None

@@ -21,13 +21,19 @@ counts differ are normalized to a shared padded shape by
 ``w = +inf``); the true per-member ``e`` is kept host-side so
 ``member(i)`` returns a faithful single graph.
 
-Fleet rounds run the DENSE segment body under vmap — the same
-measured decision ``Solver.solve_batch`` documents (the sparse
-frontier's overflow cond linearizes to select under vmap and the
-batched gather/scatter relax loses to the segment round).  Results are
-bitwise-identical to per-graph ``Solver(backend="segment")`` solves:
-every vmapped lane performs the same elementwise/segment-min ops the
-unbatched program does.
+Fleet rounds come in two backends.  ``backend="segment"`` (default)
+runs the dense segment body vmapped over the fleet axis; results are
+bitwise-identical to per-graph ``Solver(backend="segment")`` solves.
+``backend="frontier"`` runs the shared-batch-frontier round body
+(``engine._round_shared``) per member, python-UNROLLED over the F
+members inside one compiled program: each member keeps its own scalar
+overflow predicate and its own union frontier over its ``[B]`` source
+lanes — vmapping members instead would batch the predicates and
+linearize the sparse/dense ``lax.cond`` to ``select`` (both branches
+every round), the exact failure the shared frontier exists to avoid.
+Unrolled members still share ONE dispatch and one trace
+(``trace_count``), and every lane is bitwise-identical to a solo
+``Solver(backend="frontier")`` solve (docs/round-anatomy.md).
 
 Per-graph delta streams stack the same way: :func:`stack_deltas` pads
 F :class:`GraphDelta` batches to a common ``k_pad`` and stacks their
@@ -47,10 +53,12 @@ from repro.analysis.contracts import contract
 from repro.core.graph import Graph, HostGraph
 from repro.core.sssp import backends
 from repro.core.sssp.engine import (SP4_CONFIG, SSSPConfig, SSSPResult,
-                                    _fixed_by_dict, _solve, _solve_warm,
-                                    delta_taint_seeds)
+                                    _fixed_by_dict, _solve, _solve_frontier,
+                                    _solve_warm, _solve_warm_frontier,
+                                    delta_decrease_sources, delta_taint_seeds)
 from repro.core.sssp.dynamic import _ELL_PAD, GraphDelta
-from repro.core.sssp.solver import _next_pow2
+from repro.core.sssp.solver import (_default_frontier_cap, _frontier_fits,
+                                    _next_pow2)
 
 # out-of-bounds sentinel for stacked-delta padding rows: every consumer
 # scatter-drops or gather-masks indices >= e_pad, and 2^30 clears any
@@ -247,6 +255,7 @@ class FleetResult:
     rounds: np.ndarray         # int32[F]
     fixed_by: list[dict[str, int]]
     fleet: GraphFleet
+    edges_relaxed: np.ndarray | None = None  # int32[F] (frontier backend)
 
     def __len__(self) -> int:
         return len(self.sources)
@@ -255,7 +264,9 @@ class FleetResult:
         return SSSPResult(
             dist=self.dist[i], C=self.C[i], fixed=self.fixed[i],
             rounds=int(self.rounds[i]), fixed_by=self.fixed_by[i],
-            source=int(self.sources[i]), graph=self.fleet.member(i))
+            source=int(self.sources[i]), graph=self.fleet.member(i),
+            edges_relaxed=None if self.edges_relaxed is None
+            else int(self.edges_relaxed[i]))
 
     __getitem__ = result
 
@@ -271,12 +282,15 @@ class FleetBatchResult:
     rounds: np.ndarray         # int32[F, B]
     fixed_by: list[list[dict[str, int]]]
     fleet: GraphFleet
+    edges_relaxed: np.ndarray | None = None  # int32[F, B] (frontier)
 
     def result(self, f: int, i: int) -> SSSPResult:
         return SSSPResult(
             dist=self.dist[f, i], C=self.C[f, i], fixed=self.fixed[f, i],
             rounds=int(self.rounds[f, i]), fixed_by=self.fixed_by[f][i],
-            source=int(self.sources[f, i]), graph=self.fleet.member(f))
+            source=int(self.sources[f, i]), graph=self.fleet.member(f),
+            edges_relaxed=None if self.edges_relaxed is None
+            else int(self.edges_relaxed[f, i]))
 
 
 @contract(
@@ -289,6 +303,18 @@ class FleetBatchResult:
           "per-member program is the segment backend, so the segment "
           "scatter-min relax and dense budget hold per member — a "
           "budget regression here costs F-fold wall time.")
+@contract(
+    "fleet.frontier",
+    routes=("fleet_frontier.*",),
+    require=("cumsum", "scatter-min"),
+    dense_budget={"fleet_frontier.warm": 12, "fleet_frontier.*": 6},
+    notes="backend='frontier' python-unrolls the members through the "
+          "shared-batch-frontier round body — the compiled program "
+          "must contain each member's cumsum union compaction and "
+          "scatter-min relax, and the dense budget is PER PROGRAM "
+          "(F x the solo frontier budget at the probe's F=2): only "
+          "each member's step-1 overflow-fallback branch and warm "
+          "taint sweep may touch e_pad (docs/round-anatomy.md).")
 class FleetSolver:
     """Compiled SSSP over a whole :class:`GraphFleet`.
 
@@ -299,6 +325,18 @@ class FleetSolver:
     one compiled program per shape — sources and the stacked graph are
     traced operands, so delta'd fleets never retrace
     (``trace_count``).
+
+    ``backend="frontier"`` routes every member through the shared-
+    batch-frontier round body instead (``engine._round_shared``),
+    python-unrolled over members so each keeps its own scalar overflow
+    predicate and its own union frontier across its source lanes (see
+    the module docstring); ``backend="auto"`` picks it when every
+    member passes the :func:`~repro.core.sssp.solver._frontier_fits`
+    structural proxy.  Per-member :class:`CsrGraph` views live in
+    ``self.csrs`` and stay GraphDelta-coherent through ``update``
+    (stacked deltas must then carry ``csr_pos``).  Results are
+    bitwise-identical to the segment backend; ``edges_relaxed`` is
+    metered per lane.
 
     ``update(deltas)`` consumes one :func:`stack_deltas` pytree: every
     member's graph mutates AND every member's tracked per-member state
@@ -313,21 +351,43 @@ class FleetSolver:
     verbatim, nothing is recomputed).
     """
 
-    def __init__(self, fleet, cfg: SSSPConfig = SP4_CONFIG):
+    def __init__(self, fleet, cfg: SSSPConfig = SP4_CONFIG,
+                 backend: str = "segment", *,
+                 frontier_cap: int | None = None):
         if isinstance(fleet, (list, tuple)):
             fleet = GraphFleet.stack(fleet)
         if not isinstance(fleet, GraphFleet):
             raise TypeError(f"fleet must be a GraphFleet or a list of "
                             f"Graphs, got {type(fleet)!r}")
+        if backend not in ("segment", "frontier", "auto"):
+            raise ValueError(f"unknown fleet backend {backend!r}; "
+                             "expected 'segment', 'frontier', or 'auto'")
         if cfg.use_pallas:
             cfg = dataclasses.replace(cfg, use_pallas=False)
+        if backend == "auto":
+            backend = ("frontier"
+                       if all(_frontier_fits(m) for m in fleet.members())
+                       else "segment")
         self.fleet = fleet
         self.cfg = cfg
+        self.backend = backend
         self.version = 0
         self.trace_count = 0
         self.warm_trace_count = 0
         self.solves = 0
         self._tracked: dict | None = None  # last solve(): sources + states
+
+        # frontier mode: one CSR view per member (their max_out/max_in
+        # statics may differ — which is exactly why the closures UNROLL
+        # members instead of vmapping them), one shared union-buffer cap.
+        self.frontier_cap = 0
+        self.csrs: list | None = None
+        if backend == "frontier":
+            self.csrs = [m.csr() for m in fleet.members()]
+            self.frontier_cap = _next_pow2(
+                _default_frontier_cap(fleet.n) if frontier_cap is None
+                else max(1, int(frontier_cap)))
+        cap = self.frontier_cap
 
         def _count():
             self.trace_count += 1   # python side effect: runs per TRACE
@@ -335,16 +395,36 @@ class FleetSolver:
         def _count_warm():
             self.warm_trace_count += 1
 
-        def solve_fleet(gF, sources, targets, C0):
+        def _member(gF, f):
+            return jax.tree.map(lambda x: x[f], gF)
+
+        def _fprims(g, csr):
+            return backends.frontier_prims(g, csr, cap, False)
+
+        def solve_fleet(gF, csrs, sources, targets, C0):
             _count()
+            if csrs is not None:
+                outs = [_solve_frontier(_member(gF, f), cfg,
+                                        sources[f][None], _fprims(
+                                            _member(gF, f), csr),
+                                        C0=C0[f][None],
+                                        targets=targets[f][None])
+                        for f, csr in enumerate(csrs)]
+                return jax.tree.map(lambda *xs: jnp.concatenate(xs), *outs)
             return jax.vmap(
                 lambda g, s, t, c: _solve(g, cfg, s,
                                           prims=backends.segment_prims(g),
                                           C0=c, target=t)
             )(gF, sources, targets, C0)
 
-        def solve_fleet_batch(gF, sources, targets, C0):
+        def solve_fleet_batch(gF, csrs, sources, targets, C0):
             _count()
+            if csrs is not None:
+                outs = [_solve_frontier(_member(gF, f), cfg, sources[f],
+                                        _fprims(_member(gF, f), csr),
+                                        C0=C0[f], targets=targets[f])
+                        for f, csr in enumerate(csrs)]
+                return jax.tree.map(lambda *xs: jnp.stack(xs), *outs)
 
             def per_member(g, ss, tt, cc):
                 prims = backends.segment_prims(g)
@@ -354,8 +434,30 @@ class FleetSolver:
 
             return jax.vmap(per_member)(gF, sources, targets, C0)
 
-        def warm_fleet(gF_old, deltas, prev_D, prev_fixed):
+        def warm_fleet(gF_old, csrs, deltas, prev_D, prev_fixed):
             _count_warm()
+            if csrs is not None:
+                g_news, csr_news, outs = [], [], []
+                for f, csr in enumerate(csrs):
+                    g_old = _member(gF_old, f)
+                    d = jax.tree.map(lambda x: x[f], deltas)
+                    g_new = g_old.apply_delta(d)
+                    csr_new = csr.apply_delta(d)
+                    seeds, pure = delta_taint_seeds(g_old, d, prev_D[f])
+                    dec = delta_decrease_sources(g_old, d)
+                    st, sweeps, taint = _solve_warm_frontier(
+                        g_new, cfg, prev_D[f][None], prev_fixed[f][None],
+                        seeds[None], pure[None], _fprims(g_new, csr_new),
+                        dec_src=dec)
+                    g_news.append(g_new)
+                    csr_news.append(csr_new)
+                    outs.append((st, sweeps, jnp.sum(taint, axis=1)))
+                gF_new = jax.tree.map(lambda *xs: jnp.stack(xs), *g_news)
+                sts = jax.tree.map(lambda *xs: jnp.concatenate(xs),
+                                   *[o[0] for o in outs])
+                sw = jnp.concatenate([o[1] for o in outs])
+                tn = jnp.concatenate([o[2] for o in outs])
+                return gF_new, csr_news, sts, sw, tn
 
             def per_member(g_old, d, D0, f0):
                 g_new = g_old.apply_delta(d)
@@ -365,7 +467,9 @@ class FleetSolver:
                     prims=backends.segment_prims(g_new))
                 return g_new, st, sweeps, jnp.sum(taint)
 
-            return jax.vmap(per_member)(gF_old, deltas, prev_D, prev_fixed)
+            g_new, st, sweeps, tainted = jax.vmap(per_member)(
+                gF_old, deltas, prev_D, prev_fixed)
+            return g_new, None, st, sweeps, tainted
 
         self._jit_solve = jax.jit(solve_fleet)
         self._jit_batch = jax.jit(solve_fleet_batch)
@@ -410,15 +514,17 @@ class FleetSolver:
               else jnp.asarray(C0, jnp.float32))
         if c0.shape != (F, n):
             raise ValueError(f"C0 shape {c0.shape} != ({F}, {n})")
-        state = self._jit_solve(self.fleet.g, jnp.asarray(sources),
-                                jnp.asarray(tgts), c0)
+        state = self._jit_solve(self.fleet.g, self.csrs,
+                                jnp.asarray(sources), jnp.asarray(tgts), c0)
         self.solves += F
         fb = np.asarray(state.fixed_by)
         res = FleetResult(
             sources=sources, dist=state.D, C=state.C, fixed=state.fixed,
             rounds=np.asarray(state.round),
             fixed_by=[_fixed_by_dict(fb[i]) for i in range(F)],
-            fleet=self.fleet)
+            fleet=self.fleet,
+            edges_relaxed=None if state.edges is None
+            else np.asarray(state.edges))
         if not partial:
             self._tracked = dict(version=self.version, sources=sources,
                                  D=state.D, C=state.C, fixed=state.fixed,
@@ -464,8 +570,8 @@ class FleetSolver:
                 c0 = jnp.concatenate(
                     [c0, jnp.broadcast_to(c0[:, -1:],
                                           (F, b_pad - b, n))], axis=1)
-        state = self._jit_batch(self.fleet.g, jnp.asarray(padded),
-                                jnp.asarray(tpad), c0)
+        state = self._jit_batch(self.fleet.g, self.csrs,
+                                jnp.asarray(padded), jnp.asarray(tpad), c0)
         self.solves += F * b
         fb = np.asarray(state.fixed_by)
         return FleetBatchResult(
@@ -474,7 +580,9 @@ class FleetSolver:
             rounds=np.asarray(state.round[:, :b]),
             fixed_by=[[_fixed_by_dict(fb[f, i]) for i in range(b)]
                       for f in range(F)],
-            fleet=self.fleet)
+            fleet=self.fleet,
+            edges_relaxed=None if state.edges is None
+            else np.asarray(state.edges[:, :b]))
 
     # ------------------------------------------------------------------
     def update(self, deltas: GraphDelta, *, refresh: bool = True) -> dict:
@@ -493,15 +601,22 @@ class FleetSolver:
             raise ValueError(
                 f"stacked delta shape {tuple(deltas.edge_idx.shape)} must "
                 f"be [{F}, k_pad] (see stack_deltas)")
+        if self.csrs is not None and deltas.csr_pos is None:
+            raise ValueError(
+                "frontier fleet updates need the csr_pos permutation on "
+                "every member delta (build them via make_delta against "
+                "the member graphs before stack_deltas)")
         tracked = (self._tracked is not None
                    and self._tracked["version"] == self.version)
         stats = dict(edges_changed=int(np.asarray(deltas.k).sum()),
                      warm_refreshed=0, sweeps=0, warm_rounds=[], tainted=[])
         if refresh and tracked:
-            g_new, states, sweeps, tainted = self._jit_warm(
-                self.fleet.g, deltas, self._tracked["D"],
+            g_new, csr_news, states, sweeps, tainted = self._jit_warm(
+                self.fleet.g, self.csrs, deltas, self._tracked["D"],
                 self._tracked["fixed"])
             self.fleet = GraphFleet(g_new, self.fleet.es)
+            if csr_news is not None:
+                self.csrs = list(csr_news)
             self.version += 1
             fb = np.asarray(states.fixed_by)
             rounds = np.asarray(states.round)
@@ -515,6 +630,10 @@ class FleetSolver:
             stats["tainted"] = [int(t) for t in np.asarray(tainted)]
         else:
             self.fleet = self.fleet.apply_deltas(deltas)
+            if self.csrs is not None:
+                self.csrs = [
+                    csr.apply_delta(jax.tree.map(lambda x: x[f], deltas))
+                    for f, csr in enumerate(self.csrs)]
             self.version += 1
         return stats
 
@@ -558,6 +677,10 @@ class FleetSolver:
             w=jnp.asarray(state["w"]),
             in_weight=jnp.asarray(state["in_weight"]),
             out_weight=jnp.asarray(state["out_weight"]))
+        if self.csrs is not None:
+            # CSR weights are a src-sorted permutation of the restored
+            # g.w — rebuilding from the members lands them bitwise.
+            self.csrs = [m.csr() for m in self.fleet.members()]
         self.version = int(state["version"])
         self._tracked = dict(
             version=self.version,

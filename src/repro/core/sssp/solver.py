@@ -30,7 +30,7 @@ from repro.core.graph import (CsrGraph, EllGraph, Graph, HostGraph,
                               build_ell)
 from repro.core.sssp import backends
 from repro.core.sssp.engine import (SP4_CONFIG, SSSPConfig, SSSPResult,
-                                    _fixed_by_dict, _solve)
+                                    _fixed_by_dict, _solve, _solve_frontier)
 
 BACKENDS = ("auto", "segment", "ell", "pallas", "distributed", "frontier")
 
@@ -137,12 +137,15 @@ class Solver:
               (rounded up to a power of two; default scales with n).  A
               round whose wavefront outgrows it falls back to the dense
               relax for that round — results stay bitwise-identical,
-              only the work bound degrades.  Scope: the sparse rounds
-              apply to UNBATCHED solves (``solve``); ``solve_batch``
-              and the warm-refresh program run the dense round body
-              under vmap (bitwise-identical, and measured faster — the
-              vmapped gather/scatter relax loses to the segment round;
-              a shared per-batch frontier is on the roadmap).
+              only the work bound degrades.  Scope: EVERY route —
+              ``solve``, ``solve_batch``, and the warm-refresh program —
+              runs the sparse round body.  Batched lanes share ONE
+              union-compacted frontier (the union of the lanes' fresh
+              sets, one compaction and one shared edge gather per
+              round); the overflow rule is per round on the union size,
+              and the extra union vertices a lane didn't produce are
+              value-identical re-sends, so lanes stay bitwise-identical
+              to their solo solves (docs/round-anatomy.md).
 
     ``trace_count`` counts XLA traces actually performed — the regression
     tests assert it stays at one per (program, batch-shape), however many
@@ -243,14 +246,17 @@ class Solver:
 
             def solve_many(g, ell, csr, sources, targets, C0):
                 _count_trace()
-                # batched lanes run the DENSE round body even on the
-                # frontier backend (csr arrives as None below): under
-                # vmap the overflow cond linearizes to select — both
-                # branches execute per round — and the batched
-                # gather/scatter relax measures 3-5x slower than the
-                # segment round outright, so sparse batches lose until
-                # the roadmapped shared per-batch frontier buffer
-                # lands.  Results are bitwise-identical either way.
+                if csr is not None:
+                    # shared batch frontier: the batch-aware round body
+                    # (engine._round_shared) runs the lanes over ONE
+                    # union-compacted frontier buffer — every overflow
+                    # predicate stays scalar (no vmap, so no cond->select
+                    # linearization) and one shared edge gather serves
+                    # all lanes.  Bitwise-identical to the vmapped dense
+                    # round below.
+                    return _solve_frontier(g, cfg, sources,
+                                           _prims(g, ell, csr),
+                                           C0=C0, targets=targets)
                 return jax.vmap(
                     lambda s, t, c: _solve(g, cfg, s,
                                            prims=_prims(g, ell, csr),
@@ -350,9 +356,7 @@ class Solver:
         if self._sharded_batch is not None:
             state = self._sharded_batch(padded, self.graph, tpad, c0)
         else:
-            # csr=None: batched solves take the dense round (see
-            # solve_many) — the frontier win is per-solve, not per-batch
-            state = self._jit_batch(self.graph, self.ell, None,
+            state = self._jit_batch(self.graph, self.ell, self.csr,
                                     jnp.asarray(padded),
                                     jnp.asarray(tpad), c0)
         fb = np.asarray(state.fixed_by)

@@ -53,6 +53,66 @@ def _scatter_min_kernel(tgt_ref, cand_ref, out_ref):
     jax.lax.fori_loop(0, rows * cols, cell, 0)
 
 
+def _scatter_min_batch_kernel(tgt_ref, cand_ref, out_ref):
+    i = pl.program_id(1)   # row-block axis; axis 0 is the lane
+
+    @pl.when(i == 0)
+    def _init():
+        out_ref[...] = jnp.full_like(out_ref, jnp.inf)
+
+    rows, cols = tgt_ref.shape
+    width = out_ref.shape[-1]
+
+    def cell(k, _):
+        r, c = k // cols, k % cols
+        t = jnp.minimum(tgt_ref[r, c], width - 1)  # inf cand -> no-op
+        v = cand_ref[0, r, c]
+        at = (pl.dslice(0, 1), pl.dslice(t, 1))
+        pl.store(out_ref, at, jnp.minimum(pl.load(out_ref, at), v))
+        return 0
+
+    jax.lax.fori_loop(0, rows * cols, cell, 0)
+
+
+@functools.partial(jax.jit, static_argnames=("n", "block_rows", "interpret"))
+def frontier_scatter_min_batch(tgt: jax.Array, cand: jax.Array, n: int,
+                               *, block_rows: int = DEFAULT_BLOCK_ROWS,
+                               interpret: bool = True) -> jax.Array:
+    """Shared-table batched scatter-min -> float32[B, n].
+
+    ``tgt`` int32[cap, deg] is ONE union-frontier target table shared by
+    every lane; ``cand`` float32[B, cap, deg] carries per-lane
+    candidates (+inf on padding and lane-masked cells).  The grid is
+    ``(B, row_blocks)`` with the row axis innermost, so each lane's
+    output block accumulates its running min across row steps in VMEM
+    exactly like the single-lane kernel — one target gather serves all
+    lanes (the shared-batch-frontier contract).
+    """
+    B, rows, cols = cand.shape
+    rows_pad = max(block_rows,
+                   (rows + block_rows - 1) // block_rows * block_rows)
+    cols_pad = max(128, (cols + 127) // 128 * 128)
+    if (rows_pad, cols_pad) != (rows, cols):
+        tgt = jnp.pad(tgt, ((0, rows_pad - rows), (0, cols_pad - cols)),
+                      constant_values=n)
+        cand = jnp.pad(cand, ((0, 0), (0, rows_pad - rows),
+                              (0, cols_pad - cols)),
+                       constant_values=jnp.inf)
+    width = (n // 128 + 1) * 128   # >= n + 1: sentinel writes stay out
+    out = pl.pallas_call(
+        _scatter_min_batch_kernel,
+        grid=(B, rows_pad // block_rows),
+        in_specs=[
+            pl.BlockSpec((block_rows, cols_pad), lambda b, i: (i, 0)),
+            pl.BlockSpec((1, block_rows, cols_pad), lambda b, i: (b, i, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, width), lambda b, i: (b, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, width), jnp.float32),
+        interpret=interpret,
+    )(tgt, cand.astype(jnp.float32))
+    return out[:, :n]
+
+
 @functools.partial(jax.jit, static_argnames=("n", "block_rows", "interpret"))
 def frontier_scatter_min(tgt: jax.Array, cand: jax.Array, n: int,
                          *, block_rows: int = DEFAULT_BLOCK_ROWS,

@@ -41,6 +41,21 @@ def frontier_scatter_min_ref(tgt: jnp.ndarray, cand: jnp.ndarray,
     return out[:n]
 
 
+def frontier_scatter_min_batch_ref(tgt: jnp.ndarray, cand: jnp.ndarray,
+                                   n: int) -> jnp.ndarray:
+    """Batched scatter-min over ONE shared target table -> float32[B, n].
+
+    tgt[i, j] int32: destination of the j-th out-edge of the i-th
+    union-frontier vertex — SHARED across lanes (``n`` = padding),
+    cand[b, i, j] float32: lane b's relax candidate (+inf on padding /
+    lane-masked cells).  Same order-independence argument as
+    :func:`frontier_scatter_min_ref`, applied per lane.
+    """
+    B = cand.shape[0]
+    out = jnp.full((B, n + 1), jnp.inf, jnp.float32).at[:, tgt].min(cand)
+    return out[:, :n]
+
+
 def cin_layer_ref(x_k: jnp.ndarray, x_0: jnp.ndarray,
                   w: jnp.ndarray) -> jnp.ndarray:
     """xDeepFM CIN layer.

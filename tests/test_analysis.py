@@ -1,10 +1,11 @@
 """The contract gate itself: jaxpr lint, trace audit, AST rules.
 
 The mutation tests are the teeth: a seeded host sync and a seeded f64
-promotion MUST fail the gate, and the frontier dense-fallback-under-
-vmap MUST surface as a waived KNOWN_VIOLATION — so fixing it later
-makes the waiver stale, which also fails the gate until the waiver is
-deleted and the contract hardens.
+promotion MUST fail the gate.  The frontier dense-fallback-under-vmap
+waivers did their job and are GONE: the shared batch frontier landed,
+the waivers went stale, and the cumsum requirement hardened — pinned
+below as hard PASSes with an empty KNOWN_VIOLATIONS (the lifecycle
+docs/contracts.md walks through).
 """
 import datetime
 import json
@@ -55,29 +56,30 @@ def test_mutation_f64_fails_gate(tmp_path):
 
 
 # ---------------------------------------------------------------------------
-# pinning: the dense-fallback-under-vmap is a WAIVED known violation
+# pinning: the shared batch frontier hardened the cumsum contract
 # ---------------------------------------------------------------------------
 
-def test_frontier_dense_fallback_is_waived_known_violation():
-    """frontier.batched/warm run the dense round body today (no cumsum
-    compaction in the compiled program).  That must verdict as
-    KNOWN_VIOLATION — visible, waived, with expiry — not PASS (which
-    would mean the contract is toothless) and not FAIL (which would
-    mean the waiver rotted).  When the shared per-batch frontier lands,
-    this test fails until contracts.KNOWN_VIOLATIONS drops the waivers,
-    flipping the cumsum requirement into a hard contract."""
+def test_frontier_routes_pass_hard_with_no_waivers():
+    """Every frontier route — batched and warm included — now runs the
+    union-compacted sparse round body, so the cumsum/scatter-min
+    requirement holds as a HARD contract: all four routes verdict PASS
+    with zero violations, and the waiver list is empty (the old
+    frontier.{batched,warm} dense-under-vmap waivers went stale when
+    engine._round_shared landed and were deleted — the lifecycle
+    docs/contracts.md documents).  A future change that reroutes
+    batched solves through vmap of the dense body fails here AND in
+    the gate."""
+    from repro.analysis.contracts import KNOWN_VIOLATIONS
     from repro.analysis.routes import build_routes
+    assert KNOWN_VIOLATIONS == ()
     routes = build_routes(include=("frontier.*",))
     verdicts = {name: lint_route(name, r.jaxpr, dense_dims=r.dense_dims)
                 for name, r in routes.items()}
-    assert verdicts["frontier.cold"].verdict == "PASS"
-    assert verdicts["frontier.targeted"].verdict == "PASS"
-    for route in ("frontier.batched", "frontier.warm"):
+    for route in ("frontier.cold", "frontier.targeted",
+                  "frontier.batched", "frontier.warm"):
         v = verdicts[route]
-        assert v.verdict == "KNOWN_VIOLATION"
-        (viol,) = v.violations
-        assert viol.rule == "require:cumsum"
-        assert viol.waiver is not None and not viol.waiver.expired()
+        assert v.verdict == "PASS", (route, v.violations)
+        assert not v.violations
 
 
 # ---------------------------------------------------------------------------

@@ -137,15 +137,117 @@ def test_targeted_bitwise_vs_segment(family):
         assert float(rf.dist[t]) == float(rs.dist[t]), family
         assert rf.rounds == rs.rounds and rf.partial and rf.target == t
         assert _bitwise(rf.dist, rs.dist)
-    # seeded + targeted batch, one vmapped program.  Batched solves run
-    # the dense round body even on the frontier backend (vmapped sparse
-    # rounds measure slower — see Solver.solve_batch), so no edge meter:
+    # seeded + targeted batch: the lanes share ONE union-compacted
+    # frontier (engine._round_shared) and stay sparse — and metered.
     index = LandmarkIndex(g, k=3, seed=1)
     srcs, tgts = [s, 0], [hg.n - 1, hg.n // 2]
     bf = sf.solve_batch(srcs, targets=tgts, C0=index.seed_batch(srcs))
     bs = ss.solve_batch(srcs, targets=tgts, C0=index.seed_batch(srcs))
     assert _bitwise(bf.dist, bs.dist), family
-    assert bf.edges_relaxed is None
+    assert bf.edges_relaxed is not None
+    assert np.array_equal(bf.rounds, bs.rounds)
+
+
+# ---------------------------------------------------------------------------
+# (c2) shared batch frontier: batched lanes run sparse and stay bitwise
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("family", FAMILIES)
+def test_batched_bitwise_vs_segment(family):
+    hg = _graph(family)
+    g = hg.to_device()
+    sf = Solver(g, backend="frontier")
+    ss = Solver(g, backend="segment")
+    srcs = [0, 3 % hg.n, hg.n - 1]
+    bf, bs = sf.solve_batch(srcs), ss.solve_batch(srcs)
+    assert _bitwise(bf.dist, bs.dist), family
+    assert _bitwise(bf.C, bs.C) and _bitwise(bf.fixed, bs.fixed)
+    assert np.array_equal(bf.rounds, bs.rounds), family
+    assert bf.edges_relaxed is not None   # sparse rounds are metered
+    # the union frontier is bitwise-neutral per lane: every batched lane
+    # equals its solo solve, trajectory included
+    for i, s in enumerate(srcs):
+        solo = sf.solve(s)
+        assert _bitwise(bf.dist[i], solo.dist), family
+        assert int(bf.rounds[i]) == solo.rounds, family
+
+
+def test_incremental_in_weight_nf_matches_dense_recompute():
+    """The carried ``in_w_nf`` (updated only over in-neighbourhoods of
+    flipped-bit vertices) must equal the dense full-graph reduction
+    after EVERY round — the invariant docs/round-anatomy.md states."""
+    import jax
+    from repro.core.sssp import backends
+    from repro.core.sssp.engine import (_attach_carries, _compact_frontier,
+                                        _init_state, _round_shared)
+    hg = _graph("geometric", n=120, seed=7)
+    g = hg.to_device()
+    prims = backends.frontier_prims(g, g.csr(), cap=32)
+    sources = jnp.asarray([0, 11], jnp.int32)
+    state = jax.vmap(lambda s: _init_state(g, s))(sources)
+    state = _attach_carries(g, SP4_CONFIG, prims, state)
+    src_mask = jnp.zeros((g.n,), bool).at[sources].set(True)
+    f_idx, f_cnt = _compact_frontier(src_mask, 32, g.n)
+    for _ in range(12):
+        state, fresh = _round_shared(g, SP4_CONFIG, state, f_idx, f_cnt,
+                                     prims)
+        want = jax.vmap(prims.in_weight_nf)(~state.fixed)
+        assert _bitwise(state.in_w_nf, want)
+        f_idx, f_cnt = _compact_frontier(jnp.any(fresh, axis=0), 32, g.n)
+
+
+def test_batched_union_overflow_falls_back_dense():
+    hg = _graph("gnp", n=160, seed=4)   # union blows past cap=2 fast
+    g = hg.to_device()
+    tiny = Solver(g, backend="frontier", frontier_cap=2)
+    ss = Solver(g, backend="segment")
+    srcs = [3, 77, 11]
+    bt, bs = tiny.solve_batch(srcs), ss.solve_batch(srcs)
+    assert _bitwise(bt.dist, bs.dist)
+    assert np.array_equal(bt.rounds, bs.rounds)
+    # the per-round overflow rule bills the fallback at e_pad
+    assert int(np.max(bt.edges_relaxed)) >= g.e_pad
+    big = Solver(g, backend="frontier").solve_batch(srcs)
+    assert int(np.sum(bt.edges_relaxed)) > int(np.sum(big.edges_relaxed))
+
+
+# ---------------------------------------------------------------------------
+# (c3) fleet lanes on the frontier backend: python-unrolled members
+# ---------------------------------------------------------------------------
+
+def test_fleet_frontier_lanes_bitwise():
+    from repro.core.sssp.dynamic import make_delta
+    from repro.core.sssp.fleet import FleetSolver, build_fleet, stack_deltas
+    members = [_graph("chain", n=96, seed=3),
+               _graph("geometric", n=96, seed=4)]
+    fs = FleetSolver(build_fleet(members), backend="segment")
+    ff = FleetSolver(build_fleet(members), backend="frontier")
+    # auto routes thin-wavefront member sets to the frontier backend
+    assert FleetSolver(build_fleet(members),
+                       backend="auto").backend == "frontier"
+    src = np.array([0, 5], np.int32)
+    rs, rf = fs.solve(src), ff.solve(src)
+    assert _bitwise(rs.dist, rf.dist) and _bitwise(rs.fixed, rf.fixed)
+    assert np.array_equal(rs.rounds, rf.rounds)
+    assert rf.edges_relaxed is not None and rs.edges_relaxed is None
+    bsrc = np.array([[0, 7, 11], [5, 2, 9]], np.int32)
+    bs, bf = fs.solve_batch(bsrc), ff.solve_batch(bsrc)
+    assert _bitwise(bs.dist, bf.dist)
+    assert np.array_equal(bs.rounds, bf.rounds)
+    # per-member deltas (csr_pos included): warm refresh stays bitwise
+    def deltas(solver):
+        out = []
+        for i in range(2):
+            gm = solver.fleet.member(i)
+            w = np.asarray(gm.w)[:4] * 0.5
+            out.append(make_delta(gm, [0, 1, 2, 3], w.astype(np.float32)))
+        return stack_deltas(out)
+    fs.update(deltas(fs)), ff.update(deltas(ff))
+    r1, r2 = fs.resolve(), ff.resolve()
+    assert _bitwise(r1.dist, r2.dist) and np.array_equal(r1.rounds,
+                                                         r2.rounds)
+    # one trace per program shape, members unrolled inside it
+    assert ff.trace_count == 2 and ff.warm_trace_count == 1
 
 
 # ---------------------------------------------------------------------------
@@ -230,6 +332,22 @@ def test_frontier_scatter_min_kernel_matches_ref():
         assert _bitwise(got, want), (n, cap, deg)
 
 
+def test_frontier_scatter_min_batch_kernel_matches_ref():
+    from repro.kernels import ref
+    from repro.kernels.frontier_relax import frontier_scatter_min_batch
+    rng = np.random.default_rng(1)
+    for n, cap, deg, B in [(50, 8, 3, 2), (130, 16, 5, 4), (7, 4, 9, 1),
+                           (260, 2, 1, 3)]:
+        tgt = rng.integers(0, n + 1, (cap, deg)).astype(np.int32)
+        cand = rng.uniform(0.0, 9.0, (B, cap, deg)).astype(np.float32)
+        cand = np.where(tgt[None] == n, np.inf, cand).astype(np.float32)
+        got = frontier_scatter_min_batch(jnp.asarray(tgt),
+                                         jnp.asarray(cand), n)
+        want = ref.frontier_scatter_min_batch_ref(jnp.asarray(tgt),
+                                                  jnp.asarray(cand), n)
+        assert _bitwise(got, want), (n, cap, deg, B)
+
+
 def test_frontier_engine_pallas_path():
     hg = _graph("chain", n=48, seed=5)
     g = hg.to_device()
@@ -237,6 +355,10 @@ def test_frontier_engine_pallas_path():
     rp = Solver(g, cfg, backend="frontier").solve(0)
     rs = Solver(g, backend="segment").solve(0)
     assert _bitwise(rp.dist, rs.dist) and rp.rounds == rs.rounds
+    # the batched route drives the batched scatter-min kernel
+    bp = Solver(g, cfg, backend="frontier").solve_batch([0, 5])
+    bs = Solver(g, backend="segment").solve_batch([0, 5])
+    assert _bitwise(bp.dist, bs.dist)
 
 
 # ---------------------------------------------------------------------------

@@ -1,0 +1,67 @@
+"""Verify that relative markdown links in the docs resolve to real files.
+
+Scans README.md, ROADMAP.md, and docs/*.md for inline markdown links
+and backtick path references, and fails (exit 1) when a referenced
+repo-relative file does not exist — the CI "docs link check" step, so
+a renamed module or deleted doc cannot leave dangling references.
+
+  python tools/check_doc_links.py
+"""
+from __future__ import annotations
+
+import glob
+import os
+import re
+import sys
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+# [text](target) — only relative targets; skip urls and pure anchors.
+MD_LINK = re.compile(r"\[[^\]]+\]\(([^)#\s]+)(?:#[^)\s]*)?\)")
+# `path/to/file.py` — backticked repo paths (must contain a slash and a
+# known source/doc extension to avoid matching code expressions).
+TICK_PATH = re.compile(r"`([A-Za-z0-9_.\-]+(?:/[A-Za-z0-9_.\-]+)+"
+                       r"\.(?:py|md|json|yml|toml))`")
+
+
+def check_file(path: str) -> list[str]:
+    base = os.path.dirname(path)
+    with open(path, encoding="utf-8") as f:
+        text = f.read()
+    bad = []
+    # backticked paths may be repo-relative or package-relative
+    # (`kernels/ops.py` meaning src/repro/kernels/ops.py)
+    tick_bases = (ROOT, os.path.join(ROOT, "src"),
+                  os.path.join(ROOT, "src", "repro"))
+    for pat, anchor_bases in ((MD_LINK, (base,)), (TICK_PATH, tick_bases)):
+        for m in pat.finditer(text):
+            target = m.group(1)
+            if "://" in target or target.startswith("mailto:"):
+                continue
+            if not any(os.path.exists(
+                    os.path.normpath(os.path.join(b, target)))
+                    for b in anchor_bases):
+                rel = os.path.relpath(path, ROOT)
+                bad.append(f"{rel}: broken reference -> {target}")
+    return bad
+
+
+def main() -> int:
+    files = [os.path.join(ROOT, "README.md"),
+             os.path.join(ROOT, "ROADMAP.md")]
+    files += sorted(glob.glob(os.path.join(ROOT, "docs", "*.md")))
+    problems = []
+    for path in files:
+        if os.path.exists(path):
+            problems += check_file(path)
+    for p in problems:
+        print(p)
+    if problems:
+        print(f"{len(problems)} broken doc reference(s)")
+        return 1
+    print(f"doc links ok ({len(files)} files)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
